@@ -1,0 +1,37 @@
+"""Benchmark harness: one module per paper table/figure + beyond-paper extras.
+
+``python -m benchmarks.run`` executes everything and prints one
+``name,key,value`` CSV line per benchmark (plus human-readable detail).
+"""
+import sys
+import time
+import traceback
+
+MODULES = [
+    ("table4_long_output", "Table 4: long-output generation under rotary residency"),
+    ("table5_smoke", "Table 5: smoke-set completion"),
+    ("fig3_configs", "Fig. 3: configuration feasibility sweep"),
+    ("residency_policies", "§4: rotary vs LRU vs static vs full"),
+    ("kernels_bench", "Pallas kernels vs references"),
+    ("compression_bench", "int8+EF cross-pod gradient compression"),
+]
+
+
+def main() -> None:
+    failures = 0
+    for name, title in MODULES:
+        print(f"\n=== {title} ({name}) ===", flush=True)
+        t0 = time.time()
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["main"])
+            mod.main()
+            print(f"  [{time.time()-t0:.1f}s]", flush=True)
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+    print(f"\nbenchmarks done: {len(MODULES)-failures}/{len(MODULES)} ok")
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,88 @@
+"""Table 4 analog: long-output generation under rotary residency.
+
+The paper: Qwen3.6-35B-A3B Q4_K_M on an 8 GB RTX 4060 laptop — 2048 tokens at
+21.06 tok/s, ~6.3 GB VRAM. Here: (a) MEASURED decode on the reduced paper-arch
+MoE through the per-layer rotary engine (real slot rotation, real hit/miss
+accounting, host-GEMM misses), and (b) the FULL arch's modeled tok/s on the
+TPU-v5e target from the CostModel with the measured hit rate — the
+hardware-adapted Table 4 row.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+import jax
+import numpy as np
+
+
+def run(tokens_out: int = 128, quant: str | None = "int8") -> Dict:
+    from repro.config import ResidencyConfig, get_config
+    from repro.configs import reduce_for_smoke
+    from repro.core import CostModel, RotaryEngine
+    from repro.models import init_params
+    from repro.models.params import analytic_params
+    from repro.models.transformer import Runtime
+
+    full_cfg = get_config("qwen36-35b-a3b")
+    cfg = reduce_for_smoke(full_cfg)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    res = ResidencyConfig(mode="rotary", num_slots=5, quantization=quant)
+    eng = RotaryEngine(cfg, params, res, rt=Runtime(cache_len=max(256, tokens_out + 32)),
+                       batch=1)
+    prompt = np.random.default_rng(0).integers(0, cfg.vocab_size, (1, 16)).astype(np.int32)
+    t0 = time.perf_counter()
+    out = eng.generate(prompt, tokens_out)
+    wall = time.perf_counter() - t0
+    s = eng.stats.summary()
+
+    # ---- full-arch modeled numbers on the TPU target -------------------
+    cost = CostModel()
+    m = full_cfg.moe
+    mats = 3
+    dtype_b = 1 if quant == "int8" else 2
+    active = analytic_params(full_cfg, active_only=True)
+    static = active - m.top_k * mats * full_cfg.d_model * m.expert_d_ff
+    expert_bytes = mats * full_cfg.d_model * m.expert_d_ff * dtype_b
+    hit = s["hit_rate"]
+    # per token: static weights + resident expert reads on device; misses on host
+    flops = 2.0 * active
+    dev_bytes = 2 * static + m.top_k * hit * expert_bytes
+    t_dev = cost.compute_s(flops * (static + m.top_k * hit * m.expert_d_ff * full_cfg.d_model * mats) / active, dev_bytes)
+    t_host = cost.host_compute_s(2.0 * m.top_k * (1 - hit) * mats * full_cfg.d_model * m.expert_d_ff)
+    # prefetch bytes per token from measured bytes/step scaled to full arch
+    full_slot_bytes = expert_bytes
+    loads_per_step = eng.stats.bytes_loaded / max(eng.stats.steps, 1) / max(
+        eng.manager.stores[0].bytes_per_expert, 1
+    )
+    t_dma = cost.transfer_s(int(loads_per_step * full_slot_bytes))
+    stall = max(0.0, t_dma - t_dev)
+    tok_s = 1.0 / (t_dev + t_host + stall)
+    # device-resident footprint at full scale: static (attention/embed/router)
+    # weights + per-layer slot groups (+1 zero miss slot each)
+    slots = eng.manager.num_slots
+    resident_gb = (
+        2 * static + full_cfg.num_layers * (slots + 1) * expert_bytes
+    ) / 2**30
+    return {
+        "measured_tokens": int(out.shape[1]),
+        "measured_wall_s": round(wall, 2),
+        "measured_tok_s_reduced_cpu": round(out.shape[1] / wall, 2),
+        "hit_rate": hit,
+        "bytes_loaded_MB": s["bytes_loaded_MB"],
+        "modeled_full_tok_s_v5e": round(tok_s, 2),
+        "modeled_resident_GiB": round(resident_gb, 2),
+        "paper_tok_s_rtx4060": 21.06,
+        "paper_vram_GiB": 6.3,
+    }
+
+
+def main() -> None:
+    r = run()
+    for k, v in r.items():
+        print(f"  {k}: {v}")
+    print("table4,modeled_full_tok_s_v5e,%s" % r["modeled_full_tok_s_v5e"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Offload sweep: slot budget vs hit rate / bytes moved / modeled throughput.
+
+The paper's central trade-off: how far can device residency shrink before the
+miss/transfer tax erases the memory win? Sweeps num_slots on the reduced paper
+arch under the rotary policy and prints the frontier, plus the int8 (Q4_K_M
+analog) variant that halves slot bytes at equal slot count.
+
+    PYTHONPATH=src python examples/offload_sweep.py
+"""
+import jax
+import numpy as np
+
+from repro.config import ResidencyConfig, get_config
+from repro.configs import reduce_for_smoke
+from repro.core import InitializationError, RotaryEngine
+from repro.models import init_params
+from repro.models.transformer import Runtime
+
+
+def main():
+    cfg = reduce_for_smoke(get_config("qwen36-35b-a3b"))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    prompt = np.random.default_rng(0).integers(0, cfg.vocab_size, (1, 12)).astype(np.int32)
+    e = cfg.moe.num_experts
+    print(f"{'slots':>5} | {'quant':>5} | {'hit':>6} | {'MB moved':>8} | "
+          f"{'slot MB':>8} | {'model ms/tok':>12}")
+    for quant in (None, "int8"):
+        for slots in (e, 6, 5, 4, 3):
+            try:
+                eng = RotaryEngine(
+                    cfg, params,
+                    ResidencyConfig(mode="rotary" if slots < e else "full",
+                                    num_slots=slots, quantization=quant),
+                    rt=Runtime(cache_len=64), batch=1,
+                )
+            except InitializationError as err:
+                print(f"{slots:5d} | {str(quant):>5} | failed to initialize: {err}")
+                continue
+            eng.generate(prompt, 12)
+            s = eng.stats.summary()
+            slot_mb = sum(st.total_bytes for st in eng.manager.stores) / 2**20
+            print(f"{slots:5d} | {str(quant):>5} | {s['hit_rate']:6.3f} | "
+                  f"{s['bytes_loaded_MB']:8.2f} | {slot_mb:8.2f} | "
+                  f"{s['modeled_ms_per_token']:12.3f}")
+
+
+if __name__ == "__main__":
+    main()

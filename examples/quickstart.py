@@ -1,0 +1,41 @@
+"""Quickstart: build the paper's MoE, run it under rotary residency, compare
+policies — 2 minutes on a laptop CPU.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import numpy as np
+
+from repro.config import ResidencyConfig, get_config
+from repro.configs import reduce_for_smoke
+from repro.core import RotaryEngine
+from repro.models import init_params, param_summary
+from repro.models.transformer import Runtime
+
+
+def main():
+    full = get_config("qwen36-35b-a3b")                 # the paper's model class
+    print("full arch:", param_summary(full))
+    cfg = reduce_for_smoke(full)                        # same structure, tiny dims
+    params = init_params(cfg, jax.random.PRNGKey(0))
+
+    prompt = np.random.default_rng(0).integers(0, cfg.vocab_size, (1, 12)).astype(np.int32)
+    outputs = {}
+    for mode in ("full", "rotary"):
+        eng = RotaryEngine(
+            cfg, params,
+            ResidencyConfig(mode=mode, num_slots=5),    # 5 of 8 experts resident
+            rt=Runtime(cache_len=64), batch=1,
+        )
+        outputs[mode] = eng.generate(prompt, 10)
+        s = eng.stats.summary()
+        print(f"{mode:7s} tokens={outputs[mode][0].tolist()}")
+        print(f"        hit_rate={s['hit_rate']} bytes_loaded={s['bytes_loaded_MB']}MB "
+              f"modeled_ms/token={s['modeled_ms_per_token']}")
+    assert (outputs["full"] == outputs["rotary"]).all(), "residency must not change outputs"
+    print("\nOK: rotary residency generated IDENTICAL tokens with only 5/8 experts"
+          " device-resident (misses host-corrected, prefetch hidden behind compute).")
+
+
+if __name__ == "__main__":
+    main()

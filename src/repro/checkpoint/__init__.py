@@ -1,0 +1,3 @@
+from repro.checkpoint.elastic import reshard_tree, restore_elastic  # noqa: F401
+from repro.checkpoint.manager import CheckpointManager  # noqa: F401
+from repro.checkpoint.serializer import load_tree, save_tree  # noqa: F401

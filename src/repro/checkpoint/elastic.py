@@ -1,0 +1,46 @@
+"""Elastic resharding: restore a checkpoint onto a *different* mesh.
+
+Checkpoints are mesh-agnostic host arrays (serializer.py); restoring = deciding
+a sharding per leaf for the *target* mesh and ``jax.device_put``-ing each array
+with it. A job that loses a pod restarts on the smaller mesh with the same
+bytes; scale-up works symmetrically — the paper-era "elastic scaling" feature.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def reshard_tree(
+    tree: Any,
+    mesh: Optional[Mesh],
+    spec_fn: Optional[Callable[[tuple, Any], P]] = None,
+) -> Any:
+    """device_put every leaf with its target-mesh sharding.
+
+    ``spec_fn(path, leaf) -> PartitionSpec``; defaults to replicated.
+    """
+    if mesh is None:
+        return jax.tree.map(jax.numpy.asarray, tree)
+
+    def put(path, leaf):
+        spec = spec_fn(path, leaf) if spec_fn is not None else P()
+        return jax.device_put(leaf, NamedSharding(mesh, spec))
+
+    return jax.tree_util.tree_map_with_path(put, tree)
+
+
+def restore_elastic(
+    manager,
+    template: Any,
+    mesh: Optional[Mesh],
+    spec_fn: Optional[Callable] = None,
+):
+    """restore_latest + reshard onto ``mesh``. Returns (step, state, meta) or None."""
+    got = manager.restore_latest(template)
+    if got is None:
+        return None
+    step, state, meta = got
+    return step, reshard_tree(state, mesh, spec_fn), meta

@@ -1,0 +1,83 @@
+"""Pytree <-> disk serialization (numpy .npz + JSON manifest).
+
+Arrays are pulled to host as numpy (mesh-agnostic), keyed by their flattened
+tree path, with dtypes preserved (bf16 stored as uint16-with-tag since npz has
+no bfloat16). Restoring never touches device placement — ``elastic.restore``
+decides shardings, which is what makes cross-mesh (elastic) resume work.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_BF16_TAG = "__bf16__"
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def tree_to_arrays(tree: Any) -> Dict[str, np.ndarray]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out: Dict[str, np.ndarray] = {}
+    for path, leaf in flat:
+        key = _path_str(path)
+        # np.array(copy=True): a SNAPSHOT, so async writers are immune to the
+        # caller mutating host arrays after save() returns
+        arr = np.array(jax.device_get(leaf))
+        if arr.dtype == jnp.bfloat16:
+            out[key + _BF16_TAG] = arr.view(np.uint16)
+        else:
+            out[key] = arr
+    return out
+
+
+def arrays_to_tree(template: Any, arrays: Dict[str, np.ndarray]) -> Any:
+    flat, tdef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for path, leaf in flat:
+        key = _path_str(path)
+        if key in arrays:
+            arr = arrays[key]
+        elif key + _BF16_TAG in arrays:
+            arr = arrays[key + _BF16_TAG].view(jnp.bfloat16)
+        else:
+            raise KeyError(f"checkpoint missing {key!r}")
+        if tuple(arr.shape) != tuple(np.shape(leaf)):
+            raise ValueError(f"{key}: shape {arr.shape} != template {np.shape(leaf)}")
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(tdef, leaves)
+
+
+def save_tree(path: str, tree: Any, meta: Dict[str, Any]) -> None:
+    os.makedirs(path, exist_ok=True)
+    arrays = tree_to_arrays(tree)
+    # atomic write: temp file then rename (suffix must be .npz or numpy appends)
+    fd, tmp = tempfile.mkstemp(dir=path, suffix=".npz")
+    os.close(fd)
+    np.savez(tmp, **arrays)
+    os.replace(tmp, os.path.join(path, "arrays.npz"))
+    with open(os.path.join(path, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=2)
+
+
+def load_tree(path: str, template: Any) -> Tuple[Any, Dict[str, Any]]:
+    with np.load(os.path.join(path, "arrays.npz")) as z:
+        arrays = {k: z[k] for k in z.files}
+    with open(os.path.join(path, "meta.json")) as f:
+        meta = json.load(f)
+    return arrays_to_tree(template, arrays), meta

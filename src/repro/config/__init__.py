@@ -1,0 +1,27 @@
+from repro.config.base import (
+    AttentionConfig,
+    ModelConfig,
+    MoEConfig,
+    RecurrentConfig,
+    ResidencyConfig,
+    RunConfig,
+    ShapeConfig,
+    ShardingConfig,
+    flat_overrides,
+)
+from repro.config.registry import get_config, list_archs, register
+
+__all__ = [
+    "AttentionConfig",
+    "ModelConfig",
+    "MoEConfig",
+    "RecurrentConfig",
+    "ResidencyConfig",
+    "RunConfig",
+    "ShapeConfig",
+    "ShardingConfig",
+    "flat_overrides",
+    "get_config",
+    "list_archs",
+    "register",
+]

@@ -1,0 +1,270 @@
+"""Config system: frozen dataclasses describing models, residency, sharding and runs.
+
+Every architecture in ``repro.configs`` builds a :class:`ModelConfig`; every launcher
+entry point consumes a (:class:`ModelConfig`, :class:`ShapeConfig`, :class:`ShardingConfig`)
+triple. Configs are plain data — no jax imports here — so they can be constructed,
+serialized and diffed without touching device state.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from dataclasses import dataclass, field
+from typing import Any, Mapping, Optional, Sequence, Tuple
+
+# ---------------------------------------------------------------------------
+# Block kinds understood by the model builder (repro.models.transformer).
+# ---------------------------------------------------------------------------
+BLOCK_KINDS = (
+    "attn_mlp",     # full attention + dense MLP
+    "attn_moe",     # full attention + MoE FFN
+    "local_attn",   # sliding-window attention + dense MLP
+    "mlstm",        # xLSTM matrix-memory block
+    "slstm",        # xLSTM scalar-memory block
+    "rglru",        # RecurrentGemma RG-LRU block (+ dense MLP)
+)
+
+FAMILIES = ("dense", "moe", "ssm", "hybrid", "vlm", "audio")
+
+
+@dataclass(frozen=True)
+class AttentionConfig:
+    """Grouped-query attention settings."""
+
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    rope_theta: float = 10_000.0
+    qk_norm: bool = False
+    window: Optional[int] = None          # sliding-window size for local attention
+    logit_soft_cap: Optional[float] = None
+
+    def __post_init__(self) -> None:
+        if self.num_heads % max(self.num_kv_heads, 1) != 0:
+            raise ValueError(
+                f"num_heads={self.num_heads} must be divisible by "
+                f"num_kv_heads={self.num_kv_heads}"
+            )
+
+    @property
+    def q_per_kv(self) -> int:
+        return self.num_heads // self.num_kv_heads
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    """Mixture-of-Experts FFN settings (routed + optional shared experts)."""
+
+    num_experts: int
+    top_k: int
+    expert_d_ff: int
+    num_shared_experts: int = 0
+    shared_d_ff: int = 0
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.01
+    router_z_coef: float = 1e-3
+    # normalize top-k router weights to sum to 1 (qwen-style) or use raw softmax mass
+    norm_topk_prob: bool = True
+    # EP padding: expert weights stored as [padded_experts, ...] with
+    # never-routed zero dummies so the expert dim divides the model axis
+    # (DESIGN.md §4: qwen2-moe 60 -> 64). 0 = num_experts (no padding).
+    padded_experts: int = 0
+
+    def __post_init__(self) -> None:
+        if self.top_k > self.num_experts:
+            raise ValueError("top_k cannot exceed num_experts")
+        if self.padded_experts and self.padded_experts < self.num_experts:
+            raise ValueError("padded_experts must be >= num_experts")
+
+    @property
+    def storage_experts(self) -> int:
+        return self.padded_experts or self.num_experts
+
+
+@dataclass(frozen=True)
+class RecurrentConfig:
+    """Settings for recurrent block kinds (rglru / xlstm)."""
+
+    lru_width: int = 0             # RG-LRU hidden width (0 -> d_model)
+    conv_width: int = 4            # temporal-conv width in the RG-LRU block
+    num_heads: int = 4             # recurrence heads (xLSTM / RG-LRU block diagonal)
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Complete architecture description.
+
+    ``segments`` encodes the layer stack as a sequence of (unit, repeats): the unit is a
+    tuple of block kinds executed in order, and the unit is scanned ``repeats`` times with
+    stacked parameters. e.g. recurrentgemma-2b:
+    ``((("rglru","rglru","local_attn"), 8), (("rglru",), 2))`` = 26 layers.
+    """
+
+    name: str
+    family: str
+    d_model: int
+    vocab_size: int
+    segments: Tuple[Tuple[Tuple[str, ...], int], ...]
+    attention: Optional[AttentionConfig] = None
+    moe: Optional[MoEConfig] = None
+    recurrent: Optional[RecurrentConfig] = None
+    d_ff: int = 0                      # dense-MLP hidden size (0 for pure-ssm archs)
+    mlp: str = "swiglu"                # "swiglu" | "gelu_mlp" | "none"
+    norm: str = "rmsnorm"              # "rmsnorm" | "layernorm"
+    tie_embeddings: bool = False
+    dtype: str = "bfloat16"
+    # Modality frontends are STUBS per the assignment: input_specs() provides
+    # precomputed patch/frame embeddings of length ``frontend_len``.
+    frontend: Optional[str] = None     # None | "vision_patches" | "audio_frames"
+    frontend_len: int = 0
+    frontend_dim: int = 0
+    sub_quadratic: bool = False        # True -> long_500k shape applies
+    source: str = ""                   # provenance note [paper/hf id; tier]
+
+    def __post_init__(self) -> None:
+        if self.family not in FAMILIES:
+            raise ValueError(f"unknown family {self.family!r}")
+        for unit, reps in self.segments:
+            if reps <= 0:
+                raise ValueError("segment repeats must be positive")
+            for kind in unit:
+                if kind not in BLOCK_KINDS:
+                    raise ValueError(f"unknown block kind {kind!r}")
+        needs_attn = any(
+            k in ("attn_mlp", "attn_moe", "local_attn")
+            for unit, _ in self.segments
+            for k in unit
+        )
+        if needs_attn and self.attention is None:
+            raise ValueError(f"{self.name}: attention blocks present but no AttentionConfig")
+        needs_moe = any(k == "attn_moe" for unit, _ in self.segments for k in unit)
+        if needs_moe and self.moe is None:
+            raise ValueError(f"{self.name}: attn_moe blocks present but no MoEConfig")
+
+    @property
+    def num_layers(self) -> int:
+        return sum(len(unit) * reps for unit, reps in self.segments)
+
+    @property
+    def layer_kinds(self) -> Tuple[str, ...]:
+        kinds: list[str] = []
+        for unit, reps in self.segments:
+            kinds.extend(list(unit) * reps)
+        return tuple(kinds)
+
+    @property
+    def has_moe(self) -> bool:
+        return any(k == "attn_moe" for k in self.layer_kinds)
+
+    @property
+    def uses_kv_cache(self) -> bool:
+        return any(k in ("attn_mlp", "attn_moe", "local_attn") for k in self.layer_kinds)
+
+    def with_overrides(self, **kw: Any) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    def to_json(self) -> str:
+        return json.dumps(dataclasses.asdict(self), indent=2, default=str)
+
+
+# ---------------------------------------------------------------------------
+# Residency — the paper's contribution, configured here.
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class ResidencyConfig:
+    """Rotary accelerator-residency settings (the paper's §4/§5 machinery).
+
+    ``mode``:
+      * ``full``   — every expert resident in HBM (EP-sharded); paper's "whole warehouse".
+      * ``rotary`` — slot-group residency with cyclic forward/reverse rotation (the paper).
+      * ``lru``    — least-recently-used eviction baseline the paper contrasts against.
+      * ``static`` — fixed top-frequency resident set, never rotated.
+    ``granularity``: "expert" for MoE archs; "layer" for dense/ssm archs where the
+    technique degrades to layer-group residency (DESIGN.md §6).
+    """
+
+    mode: str = "full"
+    num_slots: int = 0                  # device-resident slots per MoE layer (0 = all)
+    granularity: str = "expert"
+    rotation_stride: int = 1
+    prefetch_margin: int = 2            # slots reserved for in-flight prefetch
+    predictor_ema: float = 0.8
+    reverse_threshold: float = 0.85     # demand-correlation trigger for reverse rotation
+    pin_shared: bool = True             # shared experts occupy pinned slots
+    hbm_budget_bytes: Optional[int] = None
+    host_compute_misses: bool = True    # paper's n-cpu-moe: misses run on host
+    quantization: Optional[str] = None  # None | "int8" (Q4_K_M analog; DESIGN.md §2)
+
+    def __post_init__(self) -> None:
+        if self.mode not in ("full", "rotary", "lru", "static"):
+            raise ValueError(f"unknown residency mode {self.mode!r}")
+        if self.granularity not in ("expert", "layer"):
+            raise ValueError(f"unknown granularity {self.granularity!r}")
+
+
+@dataclass(frozen=True)
+class ShardingConfig:
+    """Partitioning rules mapping model dims onto mesh axes."""
+
+    dp_axes: Tuple[str, ...] = ("data",)      # batch axes ("pod","data") when multi-pod
+    tp_axis: str = "model"                    # TP/EP axis
+    seq_axis: Optional[str] = "data"          # SP axis for long prefill (batch < dp size)
+    remat_policy: str = "dots_saveable"       # "none"|"full"|"dots_saveable"
+    scan_layers: bool = True
+    grad_compression: Optional[str] = None    # None | "int8_ef" (error feedback)
+    zero1: bool = True                        # shard optimizer state over dp axes
+    use_pallas: bool = False                  # Mosaic kernels (real TPU only)
+    # MoE dispatch: "dense" (GShard one-hot einsum baseline), "sorted" (local
+    # sort/scatter), "epsum" (shard_map EP: AG tokens -> local sorted -> RS).
+    # "epsum" falls back to "sorted" when no mesh is active.
+    moe_impl: str = "epsum"
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    """One assigned input-shape cell."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                                  # "train" | "prefill" | "decode"
+
+    def __post_init__(self) -> None:
+        if self.kind not in ("train", "prefill", "decode"):
+            raise ValueError(f"unknown shape kind {self.kind!r}")
+
+
+@dataclass(frozen=True)
+class RunConfig:
+    """Training/serving run hyperparameters."""
+
+    learning_rate: float = 3e-4
+    weight_decay: float = 0.1
+    beta1: float = 0.9
+    beta2: float = 0.95
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    microbatch: int = 0                        # 0 = no gradient accumulation
+    seed: int = 0
+    checkpoint_every: int = 200
+    checkpoint_dir: str = "/tmp/repro_ckpt"
+    keep_checkpoints: int = 3
+    log_every: int = 10
+
+
+def flat_overrides(cfg: Any, overrides: Mapping[str, Any]) -> Any:
+    """Apply dotted-path overrides, e.g. {"moe.top_k": 2} on a dataclass tree."""
+    out = cfg
+    for key, value in overrides.items():
+        parts = key.split(".")
+        out = _set_path(out, parts, value)
+    return out
+
+
+def _set_path(cfg: Any, parts: Sequence[str], value: Any) -> Any:
+    if len(parts) == 1:
+        return dataclasses.replace(cfg, **{parts[0]: value})
+    child = getattr(cfg, parts[0])
+    new_child = _set_path(child, parts[1:], value)
+    return dataclasses.replace(cfg, **{parts[0]: new_child})

@@ -1,0 +1,30 @@
+"""Assigned input-shape cells (same four for every LM arch).
+
+``decode_*`` / ``long_*`` lower ``serve_step`` (one new token against a KV cache of
+``seq_len``); ``train_4k`` lowers ``train_step``; ``prefill_32k`` lowers ``prefill_step``.
+``long_500k`` applies only to sub-quadratic archs (ModelConfig.sub_quadratic) — the skip
+for pure full-attention archs is recorded in DESIGN.md §6 and the dry-run table.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.config.base import ModelConfig, ShapeConfig
+
+SHAPES: Dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig(name="train_4k", seq_len=4_096, global_batch=256, kind="train"),
+    "prefill_32k": ShapeConfig(name="prefill_32k", seq_len=32_768, global_batch=32, kind="prefill"),
+    "decode_32k": ShapeConfig(name="decode_32k", seq_len=32_768, global_batch=128, kind="decode"),
+    "long_500k": ShapeConfig(name="long_500k", seq_len=524_288, global_batch=1, kind="decode"),
+}
+
+
+def shape_applies(cfg: ModelConfig, shape: ShapeConfig) -> bool:
+    """Whether a shape cell is runnable for this architecture."""
+    if shape.name == "long_500k":
+        return cfg.sub_quadratic
+    return True
+
+
+def applicable_shapes(cfg: ModelConfig) -> List[ShapeConfig]:
+    return [s for s in SHAPES.values() if shape_applies(cfg, s)]

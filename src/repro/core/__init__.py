@@ -1,0 +1,19 @@
+"""The paper's contribution: rotary accelerator-residency management.
+
+Slots (device buffers) + LUT indirection + cyclic rotation + hidden-state-guided
+prefetch + host-compute miss fallback, with LRU/static/full baselines.
+"""
+from repro.core.engine import RotaryEngine  # noqa: F401
+from repro.core.lut import SlotLUT  # noqa: F401
+from repro.core.policies import make_policy  # noqa: F401
+from repro.core.predictor import DemandPredictor  # noqa: F401
+from repro.core.residency import (  # noqa: F401
+    FeasibilityReport,
+    InitializationError,
+    RotaryResidencyManager,
+    check_feasibility,
+)
+from repro.core.rotation import RotaryRing  # noqa: F401
+from repro.core.slots import SlotStore, dequantize_int8, quantize_int8  # noqa: F401
+from repro.core.stats import EngineStats  # noqa: F401
+from repro.core.transfer import CostModel, TransferClock  # noqa: F401

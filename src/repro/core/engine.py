@@ -1,0 +1,328 @@
+"""RotaryEngine: the paper-faithful per-layer decode engine.
+
+Execution per decode step (the paper's §4 loop, DESIGN.md §2 "engine path"):
+
+  embed -> for each layer:
+    attn half (device jit)
+    [MoE layers] router on the *normed* hidden -> resolve LUT (LRU may issue a
+    blocking load here) -> gathered slot compute on device (misses dropped) ->
+    host GEMM correction for misses (n-cpu-moe analog) -> exact residual
+    pre-gating: layer l's hidden predicts layer l+1's demand; the manager
+    rotates l+1's slots and issues uploads BEFORE l+1 executes (double-buffered
+    prefetch — transfers hide behind layer l's compute in the clock model)
+  -> lm head -> sample.
+
+The full model weights live in host memory (numpy); only attention/static
+weights plus each layer's slot group are device-resident, mirroring Figure 1.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config.base import ModelConfig, ResidencyConfig
+from repro.core.predictor import DemandPredictor, softmax as np_softmax
+from repro.core.residency import RotaryResidencyManager
+from repro.core.stats import EngineStats
+from repro.core.transfer import CostModel, TransferClock
+from repro.models import transformer as tfm
+from repro.models import moe as moe_mod
+from repro.models.layers import apply_norm
+from repro.models.transformer import Runtime
+
+
+def _np_ffn(hw: Dict[str, np.ndarray], e: int, x: np.ndarray) -> np.ndarray:
+    """Host expert GEMM (the paper's CPU-resident expert execution)."""
+    xf = x.astype(np.float32)
+    if "w_gate" in hw:
+        g = xf @ hw["w_gate"][e].astype(np.float32)
+        h = (g / (1.0 + np.exp(-g))) * (xf @ hw["w_up"][e].astype(np.float32))
+    else:
+        u = xf @ hw["w_up"][e].astype(np.float32)
+        h = 0.5 * u * (1.0 + np.tanh(np.sqrt(2 / np.pi) * (u + 0.044715 * u**3)))
+    return h @ hw["w_down"][e].astype(np.float32)
+
+
+class RotaryEngine:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params: Any,
+        rescfg: ResidencyConfig,
+        *,
+        rt: Optional[Runtime] = None,
+        cost: Optional[CostModel] = None,
+        batch: int = 1,
+        seed: int = 0,
+    ):
+        assert cfg.has_moe, "RotaryEngine requires an MoE architecture"
+        self.cfg = cfg
+        self.rescfg = rescfg
+        self.rt = rt or Runtime(cache_len=1024)
+        self.cost = cost or CostModel()
+        self.batch = batch
+        self.stats = EngineStats()
+        self.clock = TransferClock(self.cost)
+
+        # ---- flatten the layer stack; slice per-layer params -------------
+        self.layers: List[Tuple[str, Any]] = []       # (kind, params)
+        self.moe_index: List[Optional[int]] = []      # per layer: MoE ordinal
+        self.host_experts: List[Dict[str, np.ndarray]] = []
+        routers: List[np.ndarray] = []
+        moe_ct = 0
+        for si, (unit, reps) in enumerate(cfg.segments):
+            for r in range(reps):
+                for pi, kind in enumerate(unit):
+                    p_l = jax.tree.map(lambda a, r=r: a[r], params["segments"][si][pi])
+                    if kind == "attn_moe":
+                        hw = {
+                            n: np.asarray(w, np.float32)
+                            for n, w in p_l["moe"]["experts"].items()
+                        }
+                        self.host_experts.append(hw)
+                        routers.append(np.asarray(p_l["moe"]["router"], np.float32))
+                        self.moe_index.append(moe_ct)
+                        moe_ct += 1
+                        if rescfg.mode != "full":
+                            # the warehouse stays in host memory: drop the full
+                            # expert store from device-resident layer params
+                            p_l = dict(p_l)
+                            p_l["moe"] = {
+                                k: v for k, v in p_l["moe"].items() if k != "experts"
+                            }
+                    else:
+                        self.moe_index.append(None)
+                    self.layers.append((kind, p_l))
+        self.num_moe_layers = moe_ct
+        self.embed_params = {
+            k: params[k]
+            for k in ("embed", "final_norm", "lm_head", "frontend_proj")
+            if k in params
+        }
+
+        self.predictor = DemandPredictor(routers, ema=rescfg.predictor_ema)
+        self.manager = RotaryResidencyManager(
+            cfg, rescfg, self.host_experts,
+            batch=batch, cache_len=self.rt.cache_len,
+            cost=self.cost, stats=self.stats, seed=seed,
+        )
+        self._jits: Dict[Tuple[str, str], Callable] = {}
+        self._warm_start()
+
+    # ------------------------------------------------------------------
+    def _warm_start(self) -> None:
+        """Initial residency: rotate every layer once on the uniform prior
+        (cold start — 'GGUF load' analog)."""
+        for li in range(self.num_moe_layers):
+            self.manager.prepare_layer(li, self.predictor.smoothed[li])
+
+    # ------------------------------------------------------------------
+    # jitted pieces (one compile per (kind, mode))
+    # ------------------------------------------------------------------
+    def _block_fn(self, kind: str, mode: str) -> Callable:
+        key = (kind, mode)
+        if key in self._jits:
+            return self._jits[key]
+        cfg, rt = self.cfg, self.rt
+
+        if kind == "attn_moe":
+            def attn_half(p, x, state, cur_len):
+                h = apply_norm(cfg.norm, p["ln1"], x)
+                if mode == "decode":
+                    y, new_state = tfm.attn.attention_decode(p["attn"], cfg.attention, h, state, cur_len)
+                else:
+                    y, new_state = tfm.attn.attention_prefill(
+                        p["attn"], cfg.attention, h, rt.cache_len,
+                        q_chunk=rt.q_chunk, kv_chunk=rt.kv_chunk)
+                x_mid = x + y
+                h2 = apply_norm(cfg.norm, p["ln2"], x_mid)
+                logits = moe_mod.router_logits(p["moe"], h2.reshape(-1, x.shape[-1]))
+                return x_mid, h2, logits, new_state
+
+            def moe_half(p, x_mid, h2, ids, weights, slots, lut):
+                t = ids.shape[0]
+                y2, miss = moe_mod.moe_apply_routed(
+                    p["moe"], h2.reshape(t, -1), ids, weights,
+                    slot_buffer=slots, lut=lut)
+                return x_mid + y2.reshape(x_mid.shape), miss
+
+            fns = (jax.jit(attn_half), jax.jit(moe_half))
+        else:
+            def full_block(p, x, state, cur_len):
+                y, new_state, _ = tfm._apply_block(
+                    kind, p, cfg, rt, x, mode, state if state else None, cur_len, None)
+                return y, new_state
+
+            fns = (jax.jit(full_block),)
+        self._jits[key] = fns
+        return fns
+
+    def _embed(self, tokens: jax.Array) -> jax.Array:
+        return jnp.take(self.embed_params["embed"], tokens, axis=0)
+
+    def _lm_head(self, h: jax.Array) -> jax.Array:
+        cfg = self.cfg
+        hn = apply_norm(cfg.norm, self.embed_params["final_norm"], h)
+        head = (
+            self.embed_params["embed"].T
+            if cfg.tie_embeddings
+            else self.embed_params["lm_head"]
+        )
+        return hn @ head
+
+    # ------------------------------------------------------------------
+    # core per-layer walk
+    # ------------------------------------------------------------------
+    def _run_layers(self, x: jax.Array, mode: str, cur_len: int) -> jax.Array:
+        cfg = self.cfg
+        m = cfg.moe
+        clock = self.clock
+        cur = jnp.int32(cur_len)
+        for li, (kind, p_l) in enumerate(self.layers):
+            state = self.state[li]
+            if kind == "attn_moe":
+                moe_li = self.moe_index[li]
+                attn_half, moe_half = self._block_fn(kind, mode)
+                x_mid, h2, logits_dev, new_state = attn_half(p_l, x, state, cur)
+                self.state[li] = new_state
+                # --- routing on the true router output -------------------
+                logits = np.asarray(logits_dev, np.float32)
+                probs = np_softmax(logits, axis=-1)
+                k = m.top_k
+                ids = np.argsort(-probs, axis=-1)[:, :k].astype(np.int32)
+                weights = np.take_along_axis(probs, ids, axis=-1)
+                if m.norm_topk_prob:
+                    weights = weights / np.maximum(weights.sum(-1, keepdims=True), 1e-9)
+                # --- LUT resolve (LRU may block-load here) ----------------
+                lut_arr, miss = self.manager.resolve(moe_li, ids, clock)
+                slots_tree = self.manager.stores[moe_li].as_pytree()
+                x, miss_dev = moe_half(
+                    p_l, x_mid, h2,
+                    jnp.asarray(ids), jnp.asarray(weights),
+                    slots_tree, jnp.asarray(lut_arr),
+                )
+                # --- host correction for misses ---------------------------
+                if miss.any() and self.rescfg.host_compute_misses:
+                    h2_np = np.asarray(h2, np.float32).reshape(ids.shape[0], -1)
+                    corr = np.zeros_like(h2_np)
+                    hw = self.host_experts[moe_li]
+                    n_host = 0
+                    for t_i, j in zip(*np.nonzero(miss)):
+                        e = int(ids[t_i, j])
+                        corr[t_i] += weights[t_i, j] * _np_ffn(hw, e, h2_np[t_i])
+                        n_host += 1
+                    x = x + jnp.asarray(corr, x.dtype).reshape(x.shape)
+                    self.stats.layer(moe_li).host_computed += n_host
+                    clock.host(
+                        self.cost.host_compute_s(
+                            self.manager.host_expert_flops(n_host)
+                        )
+                    )
+                # --- modeled device time for this layer -------------------
+                flops, byts = self._layer_cost(kind, x.shape, cur_len, hits=int((~miss).sum()))
+                clock.compute(self.cost.compute_s(flops, byts))
+                # --- pre-gate the NEXT MoE layer from THIS hidden ----------
+                # (cyclic: the last layer pre-gates layer 0 of the next step)
+                nxt = (moe_li + 1) % self.num_moe_layers
+                demand = self.predictor.predict(nxt, np.asarray(h2).reshape(ids.shape[0], -1))
+                self.manager.prepare_layer(nxt, demand, clock)
+                self.predictor.observe(moe_li, ids, weights)
+            else:
+                (block,) = self._block_fn(kind, mode)
+                x, new_state = block(p_l, x, state if state else {}, cur)
+                self.state[li] = new_state
+                flops, byts = self._layer_cost(kind, x.shape, cur_len, hits=0)
+                clock.compute(self.cost.compute_s(flops, byts), needs_dma=False)
+        return x
+
+    def _layer_cost(self, kind: str, xshape, cur_len: int, hits: int) -> Tuple[float, float]:
+        """(flops, bytes) estimate of one layer at current shapes (modeled clock)."""
+        from repro.models.params import _block_params
+
+        cfg = self.cfg
+        tokens = int(np.prod(xshape[:-1]))
+        n_static = _block_params(cfg, kind, active_only=True)
+        if kind == "attn_moe":
+            m = cfg.moe
+            mats = 3 if cfg.mlp == "swiglu" else 2
+            n_static -= m.top_k * mats * cfg.d_model * m.expert_d_ff
+            expert_flops = 2.0 * hits * mats * cfg.d_model * m.expert_d_ff
+            expert_bytes = hits * mats * cfg.d_model * m.expert_d_ff * 2
+        else:
+            expert_flops = expert_bytes = 0.0
+        flops = 2.0 * tokens * n_static + expert_flops
+        byts = 2.0 * n_static + expert_bytes
+        if cfg.uses_kv_cache and kind in ("attn_mlp", "attn_moe", "local_attn"):
+            a = cfg.attention
+            ctx = min(cur_len + 1, self.rt.cache_len)
+            if kind == "local_attn" and a.window:
+                ctx = min(ctx, a.window)
+            flops += 4.0 * tokens * ctx * a.num_heads * a.head_dim
+            byts += 2.0 * xshape[0] * ctx * a.num_kv_heads * a.head_dim * 2
+        return flops, byts
+
+    # ------------------------------------------------------------------
+    # public API
+    # ------------------------------------------------------------------
+    def prefill(self, tokens: np.ndarray) -> np.ndarray:
+        """tokens [B, S] -> logits [B, V]; builds the decode state."""
+        b, s = tokens.shape
+        assert b == self.batch
+        self.state = []
+        for si, (unit, reps) in enumerate(self.cfg.segments):
+            for r in range(reps):
+                for pi, kind in enumerate(unit):
+                    self.state.append(
+                        tfm._zero_block_state(self.cfg, kind, b, self.rt.cache_len)
+                    )
+        t0 = time.perf_counter()
+        x = self._embed(jnp.asarray(tokens))
+        x = self._run_layers(x, "prefill", cur_len=0)
+        logits = self._lm_head(x[:, -1:])[:, 0]
+        self.stats.wall_s += time.perf_counter() - t0
+        self.cur_len = s
+        self.stats.tokens += b * s
+        return np.asarray(logits)
+
+    def decode(
+        self,
+        last_logits: np.ndarray,
+        steps: int,
+        *,
+        greedy: bool = True,
+        seed: int = 0,
+    ) -> np.ndarray:
+        """Generate ``steps`` tokens. Returns [B, steps]."""
+        rng = np.random.default_rng(seed)
+        out = np.zeros((self.batch, steps), np.int32)
+        logits = last_logits
+        t0 = time.perf_counter()
+        for i in range(steps):
+            if greedy:
+                tok = np.argmax(logits, axis=-1).astype(np.int32)
+            else:
+                p = np_softmax(logits.astype(np.float64), axis=-1)
+                tok = np.array(
+                    [rng.choice(p.shape[-1], p=row) for row in p], np.int32
+                )
+            out[:, i] = tok
+            x = self._embed(jnp.asarray(tok)[:, None])
+            x = self._run_layers(x, "decode", cur_len=self.cur_len)
+            logits = np.asarray(self._lm_head(x[:, -1:])[:, 0])
+            self.cur_len += 1
+            self.stats.steps += 1
+            self.stats.tokens += self.batch
+        self.stats.wall_s += time.perf_counter() - t0
+        self.stats.compute_s = self.clock.compute_s
+        self.stats.transfer_s = self.clock.transfer_s
+        self.stats.stall_s = self.clock.stall_s
+        self.stats.host_compute_s = self.clock.host_s
+        return out
+
+    def generate(self, prompt: np.ndarray, max_new: int, **kw) -> np.ndarray:
+        logits = self.prefill(prompt)
+        return self.decode(logits, max_new, **kw)

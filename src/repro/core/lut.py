@@ -1,0 +1,78 @@
+"""Expert <-> slot lookup table (the patent's "lookup-table mapping structure").
+
+The LUT is the indirection that lets compiled compute address the *rotating*
+physical slot buffer: ``lut[expert] -> slot`` with ``MISS = num_slots`` pointing
+at the trailing zero slot. The inverse map ``slot -> expert`` drives eviction
+bookkeeping. Host-side numpy; the device copy is refreshed on rotation.
+"""
+from __future__ import annotations
+
+from typing import Iterable, List, Tuple
+
+import numpy as np
+
+
+class SlotLUT:
+    def __init__(self, num_experts: int, num_slots: int):
+        self.num_experts = num_experts
+        self.num_slots = num_slots
+        self.miss = num_slots                       # sentinel: trailing zero slot
+        self.e2s = np.full((num_experts,), self.miss, np.int32)
+        self.s2e = np.full((num_slots,), -1, np.int32)
+
+    # -- queries ----------------------------------------------------------
+    def slot_of(self, expert: int) -> int:
+        return int(self.e2s[expert])
+
+    def expert_in(self, slot: int) -> int:
+        return int(self.s2e[slot])
+
+    def is_resident(self, expert: int) -> bool:
+        return self.e2s[expert] != self.miss
+
+    @property
+    def resident_experts(self) -> np.ndarray:
+        return np.flatnonzero(self.e2s != self.miss)
+
+    @property
+    def free_slots(self) -> List[int]:
+        return [int(s) for s in np.flatnonzero(self.s2e < 0)]
+
+    def as_array(self) -> np.ndarray:
+        """Device-uploadable [E] int32 (missing experts -> miss sentinel)."""
+        return self.e2s.copy()
+
+    # -- updates ----------------------------------------------------------
+    def assign(self, expert: int, slot: int) -> int:
+        """Bind expert -> slot, evicting any previous occupant. Returns evicted
+        expert id or -1."""
+        if not (0 <= slot < self.num_slots):
+            raise ValueError(f"slot {slot} out of range [0,{self.num_slots})")
+        evicted = int(self.s2e[slot])
+        if evicted >= 0:
+            self.e2s[evicted] = self.miss
+        prev_slot = int(self.e2s[expert])
+        if prev_slot != self.miss:
+            self.s2e[prev_slot] = -1
+        self.e2s[expert] = slot
+        self.s2e[slot] = expert
+        return evicted
+
+    def evict(self, expert: int) -> None:
+        slot = int(self.e2s[expert])
+        if slot != self.miss:
+            self.s2e[slot] = -1
+            self.e2s[expert] = self.miss
+
+    def check_consistent(self) -> None:
+        """Invariant: e2s and s2e are mutually inverse partial bijections."""
+        for s in range(self.num_slots):
+            e = self.s2e[s]
+            if e >= 0:
+                assert self.e2s[e] == s, (s, e)
+        for e in range(self.num_experts):
+            s = self.e2s[e]
+            if s != self.miss:
+                assert self.s2e[s] == e, (e, s)
+        res = self.e2s[self.e2s != self.miss]
+        assert len(np.unique(res)) == len(res), "two experts share a slot"

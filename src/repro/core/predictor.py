@@ -1,0 +1,61 @@
+"""Hidden-state-guided residency prediction (pre-gating).
+
+Layer l+1's demand is predicted *before* it executes by pushing layer l's
+post-attention hidden state through layer l+1's router matrix — a cheap [D, E]
+GEMV — and EMA-smoothing across steps. This is the natural reading of the
+patent's "hidden-state-guided residency decisions": the signal is generated
+during execution, not from static configuration.
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+import numpy as np
+
+
+def softmax(x: np.ndarray, axis: int = -1) -> np.ndarray:
+    x = x - x.max(axis=axis, keepdims=True)
+    e = np.exp(x)
+    return e / e.sum(axis=axis, keepdims=True)
+
+
+class DemandPredictor:
+    """Per-model predictor over ``num_layers`` MoE layers.
+
+    ``routers`` holds each MoE layer's router matrix [D, E] (host copies).
+    ``predict(l, h)`` estimates the demand of layer ``l`` from hidden state
+    ``h`` [B, D] taken at the *previous* layer's output.
+    """
+
+    def __init__(self, routers: List[np.ndarray], ema: float = 0.8):
+        self.routers = [np.asarray(r, np.float32) for r in routers]
+        self.ema = ema
+        e = self.routers[0].shape[1]
+        self.smoothed = [np.full((e,), 1.0 / e, np.float64) for _ in self.routers]
+
+    @property
+    def num_layers(self) -> int:
+        return len(self.routers)
+
+    def predict(self, layer: int, h: Optional[np.ndarray]) -> np.ndarray:
+        """Demand vector [E] for ``layer``; h [B, D] or None (cold start)."""
+        if h is None:
+            return self.smoothed[layer].copy()
+        logits = np.asarray(h, np.float32) @ self.routers[layer]      # [B, E]
+        demand = softmax(logits, axis=-1).mean(axis=0).astype(np.float64)
+        self.smoothed[layer] = self.ema * self.smoothed[layer] + (1 - self.ema) * demand
+        return self.smoothed[layer].copy()
+
+    def observe(self, layer: int, ids: np.ndarray, weights: np.ndarray) -> None:
+        """Fold actually-routed experts back into the smoothed demand (feedback
+        for when pre-gating and true routing diverge)."""
+        e = self.routers[layer].shape[1]
+        actual = np.zeros((e,), np.float64)
+        np.add.at(actual, ids.reshape(-1), weights.reshape(-1).astype(np.float64))
+        s = actual.sum()
+        if s > 0:
+            actual /= s
+            self.smoothed[layer] = 0.5 * self.smoothed[layer] + 0.5 * actual
+
+    def top_experts(self, layer: int, k: int) -> np.ndarray:
+        return np.argsort(-self.smoothed[layer])[:k].astype(np.int32)

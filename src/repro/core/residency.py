@@ -1,0 +1,245 @@
+"""RotaryResidencyManager: per-MoE-layer slots + policy + LUT + accounting,
+plus the startup feasibility check that reproduces the paper's Fig. 3 failure.
+
+The manager owns host-side expert weights (the "warehouse" — full model in host
+memory) and a ``SlotStore`` per MoE layer (the rotating accelerator-resident
+subset). ``prepare_layer`` runs the policy's proactive transition and executes
+the resulting uploads; ``resolve`` maps routed expert ids through the LUT and
+classifies hits/misses.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config.base import ModelConfig, ResidencyConfig
+from repro.core.policies import ResidencyPolicy, make_policy
+from repro.core.slots import SlotStore
+from repro.core.stats import EngineStats
+from repro.core.transfer import CostModel, TransferClock
+
+
+class InitializationError(RuntimeError):
+    """Startup failure (the paper's 'failed to initialize', Fig. 3 N36/4096)."""
+
+
+@dataclass
+class FeasibilityReport:
+    ok: bool
+    reason: str
+    slot_bytes: int
+    kv_bytes: int
+    static_bytes: int            # non-MoE weights always resident
+    activation_bytes: int
+    total_bytes: int
+    budget_bytes: Optional[int]
+    min_slots: int
+
+
+def _attention_static_bytes(cfg: ModelConfig, dtype_bytes: int = 2) -> int:
+    """Weights that always stay on-device: everything except routed experts."""
+    from repro.models.params import analytic_params
+
+    total = analytic_params(cfg, active_only=False)
+    if cfg.has_moe:
+        m = cfg.moe
+        mats = 3 if cfg.mlp == "swiglu" else 2
+        routed = sum(
+            m.num_experts * mats * cfg.d_model * m.expert_d_ff
+            for k in cfg.layer_kinds if k == "attn_moe"
+        )
+        total -= routed
+    return total * dtype_bytes
+
+
+def check_feasibility(
+    cfg: ModelConfig,
+    rescfg: ResidencyConfig,
+    *,
+    batch: int,
+    cache_len: int,
+    dtype_bytes: int = 2,
+) -> FeasibilityReport:
+    """Two-sided startup check:
+
+    (1) capacity floor — ``num_slots >= top_k + prefetch_margin`` so one step's
+        routed experts plus in-flight prefetch fit (the N36-analog violates it);
+    (2) memory ceiling — slots + pinned shared + KV + static weights +
+        activation bound must fit ``hbm_budget_bytes``.
+    """
+    m = cfg.moe
+    moe_layers = sum(1 for k in cfg.layer_kinds if k == "attn_moe")
+    mats = 3 if cfg.mlp == "swiglu" else 2
+    expert_bytes = mats * cfg.d_model * m.expert_d_ff * (
+        1 if rescfg.quantization == "int8" else dtype_bytes
+    )
+    slots = rescfg.num_slots or m.num_experts
+    min_slots = m.top_k + rescfg.prefetch_margin
+    slot_bytes = moe_layers * (slots + 1) * expert_bytes
+
+    kv_bytes = 0
+    if cfg.uses_kv_cache:
+        a = cfg.attention
+        for k in cfg.layer_kinds:
+            if k in ("attn_mlp", "attn_moe", "local_attn"):
+                cap = min(a.window, cache_len) if (k == "local_attn" and a.window) else cache_len
+                kv_bytes += 2 * batch * cap * a.num_kv_heads * a.head_dim * dtype_bytes
+    static_bytes = _attention_static_bytes(cfg, dtype_bytes)
+    act_bytes = 4 * batch * max(cache_len, 1) * 0 + 8 * batch * cfg.d_model * dtype_bytes * 16
+    total = slot_bytes + kv_bytes + static_bytes + act_bytes
+
+    if rescfg.mode != "full" and slots < min_slots:
+        return FeasibilityReport(
+            False,
+            f"num_slots={slots} < top_k({m.top_k}) + prefetch_margin"
+            f"({rescfg.prefetch_margin}) = {min_slots}: no startup margin",
+            slot_bytes, kv_bytes, static_bytes, act_bytes, total,
+            rescfg.hbm_budget_bytes, min_slots,
+        )
+    if rescfg.hbm_budget_bytes is not None and total > rescfg.hbm_budget_bytes:
+        return FeasibilityReport(
+            False,
+            f"resident bytes {total/2**30:.2f} GiB exceed budget "
+            f"{rescfg.hbm_budget_bytes/2**30:.2f} GiB",
+            slot_bytes, kv_bytes, static_bytes, act_bytes, total,
+            rescfg.hbm_budget_bytes, min_slots,
+        )
+    return FeasibilityReport(
+        True, "ok", slot_bytes, kv_bytes, static_bytes, act_bytes, total,
+        rescfg.hbm_budget_bytes, min_slots,
+    )
+
+
+class RotaryResidencyManager:
+    """Owns residency state for every MoE layer of one model instance."""
+
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        rescfg: ResidencyConfig,
+        host_experts: List[Dict[str, np.ndarray]],   # per MoE layer: {w_*: [E, ...]}
+        *,
+        batch: int,
+        cache_len: int,
+        cost: Optional[CostModel] = None,
+        stats: Optional[EngineStats] = None,
+        seed: int = 0,
+    ):
+        report = check_feasibility(cfg, rescfg, batch=batch, cache_len=cache_len)
+        if not report.ok:
+            raise InitializationError(report.reason)
+        self.cfg = cfg
+        self.rescfg = rescfg
+        self.report = report
+        self.cost = cost or CostModel()
+        self.stats = stats or EngineStats()
+        self.host_experts = host_experts
+        m = cfg.moe
+        slots = rescfg.num_slots or m.num_experts
+        if rescfg.mode == "full":
+            slots = m.num_experts
+        self.num_slots = slots
+        dtype = jnp.dtype(cfg.dtype)
+        self.stores: List[SlotStore] = []
+        self.policies: List[ResidencyPolicy] = []
+        for li, hw in enumerate(host_experts):
+            shapes = {name: tuple(w.shape[1:]) for name, w in hw.items()}
+            store = SlotStore(slots, shapes, dtype, rescfg.quantization)
+            policy = make_policy(rescfg.mode, m.num_experts, slots, rescfg, seed=seed + li)
+            # full policy: preload everything (identity LUT)
+            if rescfg.mode == "full":
+                for e in range(m.num_experts):
+                    store.write(e, {n: hw[n][e] for n in hw})
+            self.stores.append(store)
+            self.policies.append(policy)
+
+    # ------------------------------------------------------------------
+    def prepare_layer(self, layer: int, demand: np.ndarray, clock: Optional[TransferClock] = None) -> int:
+        """Run the proactive policy transition; execute uploads. Returns bytes."""
+        policy = self.policies[layer]
+        loads = policy.prepare(demand)
+        moved = self._execute_loads(layer, loads)
+        ls = self.stats.layer(layer)
+        ls.loads += len(loads)
+        ls.bytes_loaded += moved
+        decision = getattr(policy, "last_decision", None)
+        if decision is not None:
+            if decision.reverse_jump:
+                ls.reverse_rotations += 1
+            elif decision.delta:
+                ls.forward_rotations += 1
+        if clock is not None:
+            clock.prefetch(moved)
+        return moved
+
+    def _execute_loads(self, layer: int, loads: List[Tuple[int, int]]) -> int:
+        hw = self.host_experts[layer]
+        store = self.stores[layer]
+        moved = 0
+        for expert, slot in loads:
+            moved += store.write(slot, {n: hw[n][expert] for n in hw})
+        return moved
+
+    def resolve(
+        self, layer: int, ids: np.ndarray, clock: Optional[TransferClock] = None
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """Routed ids [T, k] -> (lut array [E], miss mask [T, k]).
+
+        LRU-style policies may answer a miss with a blocking load (charged to the
+        clock as a stall); others leave misses to host compute.
+        """
+        policy = self.policies[layer]
+        policy.touch(np.unique(ids))
+        lut = policy.lut
+        miss = lut.e2s[ids] == lut.miss
+        if miss.any():
+            for e in np.unique(ids[miss]):
+                load = policy.on_miss(int(e))
+                if load is not None:
+                    moved = self._execute_loads(layer, [load])
+                    ls = self.stats.layer(layer)
+                    ls.loads += 1
+                    ls.bytes_loaded += moved
+                    if clock is not None:
+                        clock.blocking(moved)
+            miss = lut.e2s[ids] == lut.miss
+        ls = self.stats.layer(layer)
+        ls.hits += int((~miss).sum())
+        ls.misses += int(miss.sum())
+        return lut.as_array(), miss
+
+    # ------------------------------------------------------------------
+    def layer_residency(self, layer: int) -> Dict[str, Any]:
+        """{slots, lut} pytree for ``decode_model`` / ``_apply_block``."""
+        return {
+            "slots": self.stores[layer].as_pytree(),
+            "lut": jnp.asarray(self.policies[layer].lut.as_array()),
+        }
+
+    def stacked_residency(self) -> Any:
+        """Residency pytree stacked per segment (whole-model compiled path)."""
+        segs = []
+        li = 0
+        for unit, reps in self.cfg.segments:
+            if not any(k == "attn_moe" for k in unit):
+                segs.append({})
+                continue
+            per_rep = [self.layer_residency(li + r) for r in range(reps)]
+            li += reps
+            stacked = {
+                "slots": {
+                    n: jnp.stack([p["slots"][n] for p in per_rep])
+                    for n in per_rep[0]["slots"]
+                },
+                "lut": jnp.stack([p["lut"] for p in per_rep]),
+            }
+            segs.append(stacked)
+        return tuple(segs)
+
+    def host_expert_flops(self, tokens: int) -> float:
+        m = self.cfg.moe
+        mats = 3 if self.cfg.mlp == "swiglu" else 2
+        return 2.0 * tokens * mats * self.cfg.d_model * m.expert_d_ff

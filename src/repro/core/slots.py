@@ -1,0 +1,114 @@
+"""Device slot buffers: the rotating accelerator-resident expert store.
+
+One ``SlotStore`` per MoE layer holds ``num_slots + 1`` stacked expert weight
+sets — the trailing slot is all-zeros and backs the LUT's MISS sentinel, so the
+compiled gather path needs no branches. Writes go through
+``jax.lax.dynamic_update_slice`` style ``.at[slot].set`` with donation, the
+host->HBM DMA analog.
+
+Optional int8 quantization (the Q4_K_M analog, DESIGN.md §2): experts are stored
+as symmetric per-output-channel int8 + f32 scales; the gather path dequantizes
+after the take (the Pallas ``moe_gmm`` kernel dequantizes in VMEM on real TPUs).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Dict[str, Any]
+
+
+def quantize_int8(w: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """Symmetric per-output-channel (last-dim) int8. w [.., F] -> (q int8, scale f32)."""
+    amax = np.max(np.abs(w), axis=tuple(range(w.ndim - 1)), keepdims=True)
+    scale = (amax / 127.0 + 1e-12).astype(np.float32)
+    q = np.clip(np.round(w / scale), -127, 127).astype(np.int8)
+    return q, scale.reshape(w.shape[-1])
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array, dtype: Any) -> jax.Array:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+class SlotStore:
+    """Rotating device-resident buffer for one MoE layer's routed experts."""
+
+    def __init__(
+        self,
+        num_slots: int,
+        weight_shapes: Dict[str, Tuple[int, ...]],   # e.g. w_gate: (D, F)
+        dtype: Any,
+        quantization: Optional[str] = None,
+    ):
+        self.num_slots = num_slots
+        self.dtype = jnp.dtype(dtype)
+        self.quantization = quantization
+        store_dtype = jnp.int8 if quantization == "int8" else self.dtype
+        self.buffers: Params = {
+            name: jnp.zeros((num_slots + 1,) + shape, store_dtype)
+            for name, shape in weight_shapes.items()
+        }
+        if quantization == "int8":
+            self.scales: Params = {
+                name: jnp.zeros((num_slots + 1, shape[-1]), jnp.float32)
+                for name, shape in weight_shapes.items()
+            }
+        else:
+            self.scales = {}
+
+    @property
+    def bytes_per_expert(self) -> int:
+        per = 0
+        for name, buf in self.buffers.items():
+            per += int(np.prod(buf.shape[1:])) * buf.dtype.itemsize
+            if self.scales:
+                per += int(np.prod(self.scales[name].shape[1:])) * 4
+        return per
+
+    @property
+    def total_bytes(self) -> int:
+        return self.bytes_per_expert * (self.num_slots + 1)
+
+    def write(self, slot: int, expert_weights: Dict[str, np.ndarray]) -> int:
+        """Upload one expert into ``slot``. Returns bytes moved host->device."""
+        assert 0 <= slot < self.num_slots, f"slot {slot} out of range"
+        moved = 0
+        for name, w in expert_weights.items():
+            w = np.asarray(w)
+            if self.quantization == "int8":
+                q, scale = quantize_int8(w.astype(np.float32))
+                self.buffers[name] = self.buffers[name].at[slot].set(q)
+                self.scales[name] = self.scales[name].at[slot].set(scale)
+                moved += q.nbytes + scale.nbytes
+            else:
+                self.buffers[name] = self.buffers[name].at[slot].set(
+                    jnp.asarray(w, self.dtype)
+                )
+                moved += int(np.prod(w.shape)) * self.dtype.itemsize
+        return moved
+
+    def as_pytree(self) -> Params:
+        """The {w_*} pytree ``moe_gathered`` consumes (dequantized view if int8).
+
+        int8 note: on this CPU host we dequantize lazily per call; the Pallas
+        kernel path keeps int8 in HBM/VMEM and dequantizes in-register.
+        """
+        if self.quantization == "int8":
+            out = {}
+            for name, buf in self.buffers.items():
+                # scale [S+1, F] broadcasts over the middle dims of [S+1, .., F]
+                scale = self.scales[name].reshape(
+                    (buf.shape[0],) + (1,) * (buf.ndim - 2) + (buf.shape[-1],)
+                )
+                out[name] = dequantize_int8(buf, scale, self.dtype)
+            return out
+        return dict(self.buffers)
+
+    def raw_pytree(self) -> Params:
+        out = dict(self.buffers)
+        for name, s in self.scales.items():
+            out[f"scale_{name}"] = s
+        return out

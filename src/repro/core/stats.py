@@ -1,0 +1,78 @@
+"""Residency accounting: hits/misses, bytes moved, modeled stall time.
+
+All counters are plain python/numpy (host side) — they describe the engine's
+externally-observable behaviour, mirroring the paper's Table 4 metrics.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List
+
+
+@dataclass
+class LayerStats:
+    hits: int = 0
+    misses: int = 0
+    host_computed: int = 0          # misses executed on host (n-cpu-moe analog)
+    loads: int = 0                  # expert uploads to device slots
+    bytes_loaded: int = 0
+    reverse_rotations: int = 0
+    forward_rotations: int = 0
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 1.0
+
+
+@dataclass
+class EngineStats:
+    layers: Dict[int, LayerStats] = field(default_factory=dict)
+    steps: int = 0
+    tokens: int = 0
+    compute_s: float = 0.0          # modeled device compute time
+    transfer_s: float = 0.0         # modeled host->device transfer time
+    stall_s: float = 0.0            # transfer time NOT hidden behind compute
+    host_compute_s: float = 0.0     # modeled host GEMM time for misses
+    wall_s: float = 0.0             # measured wall time (reduced model, CPU)
+
+    def layer(self, idx: int) -> LayerStats:
+        return self.layers.setdefault(idx, LayerStats())
+
+    @property
+    def hits(self) -> int:
+        return sum(l.hits for l in self.layers.values())
+
+    @property
+    def misses(self) -> int:
+        return sum(l.misses for l in self.layers.values())
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 1.0
+
+    @property
+    def bytes_loaded(self) -> int:
+        return sum(l.bytes_loaded for l in self.layers.values())
+
+    def modeled_step_time(self) -> float:
+        """Per-token modeled latency: compute + unhidden transfer + host misses."""
+        if self.steps == 0:
+            return 0.0
+        return (self.compute_s + self.stall_s + self.host_compute_s) / self.steps
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "steps": self.steps,
+            "tokens": self.tokens,
+            "hit_rate": round(self.hit_rate, 4),
+            "misses": self.misses,
+            "bytes_loaded_MB": round(self.bytes_loaded / 2**20, 2),
+            "modeled_ms_per_token": round(1e3 * self.modeled_step_time(), 3),
+            "modeled_tok_per_s": round(
+                1.0 / self.modeled_step_time() if self.modeled_step_time() else 0.0, 2
+            ),
+            "measured_wall_s": round(self.wall_s, 3),
+            "stall_s": round(self.stall_s, 4),
+        }

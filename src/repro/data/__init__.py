@@ -1,0 +1,2 @@
+from repro.data.pipeline import ShardedLoader  # noqa: F401
+from repro.data.synthetic import SyntheticSpec, batch_at_step, stream  # noqa: F401

@@ -1,0 +1,2 @@
+from repro.distributed.fault_tolerance import FaultTolerantCoordinator, JobState  # noqa: F401
+from repro.distributed import sharding  # noqa: F401

@@ -1,0 +1,261 @@
+"""Partition rules: mapping every tensor in the system onto mesh axes.
+
+Axis roles (DESIGN.md §4): DP batch over ("pod","data"); TP/EP over "model";
+ZeRO-1 shards optimizer moments over the dp axes; optional FSDP adds dp-axis
+sharding to parameter storage (all-gathered per layer by GSPMD at use).
+
+Rules are name/shape based over the params pytree produced by
+``repro.models.init_params``; every launcher and the dry-run go through
+``make_shardings`` so there is exactly one source of truth.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.config.base import ModelConfig, ShapeConfig, ShardingConfig
+
+
+def _path_keys(path) -> Tuple[str, ...]:
+    keys = []
+    for p in path:
+        if hasattr(p, "key"):
+            keys.append(str(p.key))
+        elif hasattr(p, "idx"):
+            keys.append(str(p.idx))
+    return tuple(keys)
+
+
+def param_spec(
+    path, leaf, cfg: ModelConfig, sh: ShardingConfig, *, fsdp: bool = False
+) -> P:
+    """PartitionSpec for one parameter leaf."""
+    keys = _path_keys(path)
+    name = keys[-1] if keys else ""
+    tp = sh.tp_axis
+    fa = sh.dp_axes if fsdp else None   # fsdp storage axes
+    ndim = np.ndim(leaf)
+    # NOTE: stacked layer params have a leading `reps` dim (never sharded);
+    # specs below address the trailing dims and are padded on the left.
+    def pad(spec_tail: Tuple) -> P:
+        lead = ndim - len(spec_tail)
+        return P(*([None] * lead), *spec_tail)
+
+    if name in ("embed",):
+        return P(tp, None) if not fsdp else P(tp, fa)
+    if name in ("lm_head",):
+        return P(None, tp) if not fsdp else P(fa, tp)
+    if name in ("frontend_proj",):
+        return P(None, None)
+    if keys and "experts" in keys:
+        # routed experts [reps?, E, D, F] — EP over the expert dim
+        if name == "w_down":
+            return pad((tp, None if not fsdp else fa, None))
+        return pad((tp, None, None if not fsdp else fa))
+    if name in ("router", "shared_gate"):
+        return pad((None, None))
+    if name in ("wq", "wk", "wv", "wo"):
+        # §Perf iteration 3: shard attention projections over heads ONLY when
+        # the head count divides the axis — otherwise the flattened [D, H*dh]
+        # split cuts heads mid-head_dim and GSPMD reshards every layer
+        # (starcoder2-7b: 36 heads / 16 -> 77 s/step of collectives).
+        heads = (
+            cfg.attention.num_heads if name in ("wq", "wo")
+            else cfg.attention.num_kv_heads
+        )
+        if heads % _tp_size_hint() != 0:
+            return pad((None, None))
+        if name == "wo":
+            return pad((tp, None if not fsdp else fa))
+        return pad((None if not fsdp else fa, tp))
+    if name in ("w_gate", "w_up", "w_in", "w_a", "w_b",
+                "w_q", "w_k", "w_v", "w_if", "w_rg", "w_ig"):
+        return pad((None if not fsdp else fa, tp))
+    if name in ("w_down", "w_out"):
+        return pad((tp, None if not fsdp else fa))
+    if name in ("conv_w",):
+        return pad((None, tp))
+    if name in ("r",):                     # slstm block-diag [4, H, dh, dh]
+        return pad((None, None, None))
+    if name in ("lam", "conv_b", "skip", "b", "b_if"):
+        return pad((tp,)) if name in ("lam", "conv_b", "skip") else pad((None,))
+    # norms / scales / biases: replicated
+    return P(*([None] * ndim))
+
+
+def sanitize_spec(spec: P, shape, mesh: Mesh) -> P:
+    """Drop sharding on dims the mesh axes don't divide (tiny odd dims like
+    xlstm's [.., 2H] gate projections are replicated instead of padded)."""
+    entries = []
+    for i, entry in enumerate(spec):
+        if entry is None:
+            entries.append(None)
+            continue
+        axes = entry if isinstance(entry, (tuple, list)) else (entry,)
+        size = int(np.prod([dict(mesh.shape)[a] for a in axes]))
+        if shape[i] % size != 0:
+            entries.append(None)
+        else:
+            entries.append(entry)
+    return P(*entries)
+
+
+def make_param_shardings(
+    cfg: ModelConfig, mesh: Mesh, sh: ShardingConfig, params_shape: Any, *, fsdp: bool = False
+) -> Any:
+    set_tp_size_hint(dict(mesh.shape)[sh.tp_axis])
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(
+            mesh,
+            sanitize_spec(
+                param_spec(path, leaf, cfg, sh, fsdp=fsdp), np.shape(leaf), mesh
+            ),
+        ),
+        params_shape,
+    )
+
+
+def opt_spec(path, leaf, cfg: ModelConfig, sh: ShardingConfig, *, zero1: bool = True) -> P:
+    """Optimizer moments: ZeRO-1 — param spec + dp sharding on the first free dim."""
+    keys = _path_keys(path)
+    if keys and keys[-1] == "step":
+        return P()
+    # moments mirror params below {"m"/"v"}/...
+    sub_path = path[1:]
+    base = param_spec(sub_path, leaf, cfg, sh)
+    if not zero1:
+        return base
+    specs = list(base) + [None] * (np.ndim(leaf) - len(base))
+    for i, s in enumerate(specs):
+        if s is None and np.shape(leaf)[i] % _dp_size_hint(sh) == 0 and np.shape(leaf)[i] > 1:
+            specs[i] = sh.dp_axes if len(sh.dp_axes) > 1 else sh.dp_axes[0]
+            break
+    return P(*specs)
+
+
+_DP_SIZE = {"hint": 16}
+_TP_SIZE = {"hint": 16}
+
+
+def _dp_size_hint(sh: ShardingConfig) -> int:
+    return _DP_SIZE["hint"]
+
+
+def set_dp_size_hint(n: int) -> None:
+    _DP_SIZE["hint"] = n
+
+
+def _tp_size_hint() -> int:
+    return _TP_SIZE["hint"]
+
+
+def set_tp_size_hint(n: int) -> None:
+    _TP_SIZE["hint"] = n
+
+
+def make_train_state_shardings(
+    cfg: ModelConfig, mesh: Mesh, sh: ShardingConfig, state_shape: Any, *, fsdp: bool = False
+) -> Any:
+    set_dp_size_hint(int(np.prod([mesh.shape[a] for a in sh.dp_axes])))
+
+    def spec_for(path, leaf):
+        keys = _path_keys(path)
+        if keys[0] == "params":
+            return NamedSharding(
+                mesh,
+                sanitize_spec(
+                    param_spec(path[1:], leaf, cfg, sh, fsdp=fsdp),
+                    np.shape(leaf), mesh,
+                ),
+            )
+        if keys[0] == "opt":
+            return NamedSharding(
+                mesh,
+                sanitize_spec(
+                    opt_spec(path[1:], leaf, cfg, sh, zero1=sh.zero1),
+                    np.shape(leaf), mesh,
+                ),
+            )
+        if keys[0] == "ef":
+            # [pod, *param_shape] bf16: pod-split + one free dim over "data"
+            base_leaf = jax.ShapeDtypeStruct(tuple(np.shape(leaf)[1:]), np.float32)
+            base = param_spec(path[1:], base_leaf, cfg, sh)
+            specs = list(base) + [None] * (np.ndim(leaf) - 1 - len(base))
+            for i, s in enumerate(specs):
+                if (s is None and np.shape(leaf)[i + 1] > 1
+                        and np.shape(leaf)[i + 1] % mesh.shape["data"] == 0):
+                    specs[i] = "data"
+                    break
+            return NamedSharding(mesh, P("pod", *specs))
+        return NamedSharding(mesh, P())
+
+    return jax.tree_util.tree_map_with_path(spec_for, state_shape)
+
+
+# ---------------------------------------------------------------------------
+# Activations / inputs / decode state
+# ---------------------------------------------------------------------------
+def dp_size(mesh: Mesh, sh: ShardingConfig) -> int:
+    return int(np.prod([mesh.shape[a] for a in sh.dp_axes]))
+
+
+def _dp_or_none(mesh: Optional[Mesh], sh: ShardingConfig, n: int):
+    """dp axes if the batch dim divides them, else None (e.g. long_500k B=1)."""
+    if mesh is not None and n % dp_size(mesh, sh) != 0:
+        return None
+    return sh.dp_axes if len(sh.dp_axes) > 1 else sh.dp_axes[0]
+
+
+def batch_spec(sh: ShardingConfig, mesh: Optional[Mesh] = None, global_batch: int = 0) -> P:
+    return P(_dp_or_none(mesh, sh, global_batch), None)
+
+
+def token_spec(sh: ShardingConfig, mesh: Optional[Mesh] = None, global_batch: int = 0) -> P:
+    """decode-step tokens [B]."""
+    return P(_dp_or_none(mesh, sh, global_batch))
+
+
+def frontend_spec(sh: ShardingConfig, mesh: Optional[Mesh] = None, global_batch: int = 0) -> P:
+    return P(_dp_or_none(mesh, sh, global_batch), None, None)
+
+
+def state_spec(
+    path, leaf, cfg: ModelConfig, sh: ShardingConfig, shape: ShapeConfig,
+    mesh: Optional[Mesh] = None,
+) -> P:
+    """Decode/prefill per-layer state: KV caches [reps, B, S, Hkv, dh] shard
+    batch over dp and the *sequence* over the model axis (long caches dominate
+    HBM; seq-sharding keeps every arch uniform regardless of kv-head count).
+    Recurrent states [reps, B, W...]: batch over dp, width over model."""
+    keys = _path_keys(path)
+    dp = _dp_or_none(mesh, sh, shape.global_batch)
+    nd = np.ndim(leaf)
+    name = keys[-1] if keys else ""
+    if name in ("k", "v") and nd == 5:
+        return P(None, dp, sh.tp_axis, None, None)
+    if name == "h" and nd == 3:                   # rglru h [reps, B, W]
+        return P(None, dp, sh.tp_axis)
+    if name == "conv" and nd == 4:                # [reps, B, cw-1, W]
+        return P(None, dp, None, sh.tp_axis)
+    if name in ("c",) and nd == 5:                # mlstm C [reps, B, H, dk, dv]
+        return P(None, dp, None, None, None)
+    if nd >= 2:
+        return P(None, dp, *([None] * (nd - 2)))
+    return P(*([None] * nd))
+
+
+def make_state_shardings(
+    cfg: ModelConfig, mesh: Mesh, sh: ShardingConfig, state_shape: Any, shape: ShapeConfig
+) -> Any:
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(
+            mesh,
+            sanitize_spec(
+                state_spec(path, leaf, cfg, sh, shape, mesh), np.shape(leaf), mesh
+            ),
+        ),
+        state_shape,
+    )

@@ -1,0 +1,3 @@
+"""Pallas TPU kernels for the perf-critical layers (validated in interpret mode
+on CPU; Mosaic-lowered on TPU): slot-LUT grouped matmul (the paper's hot spot),
+flash attention (prefill), flash-decode, fused top-k gate."""

@@ -1,0 +1,115 @@
+"""Flash-decode: single-token attention against a long KV cache.
+
+Grid (B, Hkv, S/bk): each step loads one KV block into VMEM and updates the
+online-softmax state for the ``g`` grouped query heads that share the kv head.
+Per-row ``lengths`` arrive via scalar prefetch (SMEM) so invalid cache slots are
+masked without a host round-trip — this also serves ragged continuous-batching
+batches. KV is the dominant HBM traffic; the kernel reads it exactly once.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+LANES = 128
+
+
+def _decode_kernel(
+    len_ref, q_ref, k_ref, v_ref, o_ref,
+    m_ref, l_ref, acc_ref,
+    *, scale: float, soft_cap: Optional[float], block_kv: int, groups: int,
+):
+    b, ki = pl.program_id(0), pl.program_id(2)
+    k_start = ki * block_kv
+    length = len_ref[b]
+
+    @pl.when(ki == 0)
+    def _():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(k_start < length)
+    def _():
+        q = q_ref[0, 0].astype(jnp.float32)                 # [g, dh]
+        k = k_ref[0, 0].astype(jnp.float32)                 # [bk, dh]
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # [g, bk]
+        if soft_cap is not None:
+            s = soft_cap * jnp.tanh(s / soft_cap)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(kpos < length, s, NEG_INF)
+        m_prev = m_ref[:, 0]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = jnp.broadcast_to(
+            (l_ref[:, 0] * corr + p.sum(axis=-1))[:, None], l_ref.shape
+        )
+        m_ref[...] = jnp.broadcast_to(m_new[:, None], m_ref.shape)
+        vb = v_ref[0, 0].astype(jnp.float32)                # [bk, dh]
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jnp.dot(
+            p, vb, preferred_element_type=jnp.float32
+        )
+
+    @pl.when(ki == pl.num_programs(2) - 1)
+    def _():
+        l = jnp.maximum(l_ref[:, 0], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("soft_cap", "block_kv", "interpret")
+)
+def decode_attention(
+    q: jax.Array,                   # [B, H, dh] one new token per row
+    k: jax.Array,                   # [B, S, Hkv, dh]
+    v: jax.Array,
+    lengths: jax.Array,             # [B] int32 valid positions (includes new token)
+    *,
+    soft_cap: Optional[float] = None,
+    block_kv: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    b, h, dh = q.shape
+    s, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    bk = min(block_kv, s)
+    assert s % bk == 0, f"cache len {s} must divide block_kv {bk}"
+    qg = q.reshape(b, hkv, g, dh)
+    kt = k.transpose(0, 2, 1, 3)                            # [B, Hkv, S, dh]
+    vt = v.transpose(0, 2, 1, 3)
+    grid = (b, hkv, s // bk)
+    kernel = functools.partial(
+        _decode_kernel,
+        scale=1.0 / math.sqrt(dh), soft_cap=soft_cap, block_kv=bk, groups=g,
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, g, dh), lambda b_, h_, ki, L: (b_, h_, 0, 0)),
+            pl.BlockSpec((1, 1, bk, dh), lambda b_, h_, ki, L: (b_, h_, ki, 0)),
+            pl.BlockSpec((1, 1, bk, dh), lambda b_, h_, ki, L: (b_, h_, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, dh), lambda b_, h_, ki, L: (b_, h_, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, LANES), jnp.float32),
+            pltpu.VMEM((g, LANES), jnp.float32),
+            pltpu.VMEM((g, dh), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, dh), q.dtype),
+        interpret=interpret,
+        name="decode_attention",
+    )(lengths.astype(jnp.int32), qg, kt, vt)
+    return out.reshape(b, h, dh)

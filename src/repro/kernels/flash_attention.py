@@ -1,0 +1,132 @@
+"""Flash attention (prefill/train) with explicit VMEM tiling.
+
+Grid (B, H, Sq/bq, Skv/bk), kv innermost. Online softmax state (running max,
+denominator, output accumulator) lives in VMEM scratch; m/l are stored
+lane-replicated at width 128 to satisfy TPU tiling. GQA is handled in the index
+map (q head h reads kv head h // group). Fully-masked blocks are skipped with
+``pl.when`` — on TPU the weight DMAs still issue but the MXU work is skipped;
+a production grid would prune them (see benchmarks/kernels_bench for the
+counted-FLOP comparison vs the chunked-jnp path).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+LANES = 128
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref,
+    m_ref, l_ref, acc_ref,
+    *, scale: float, causal: bool, window: Optional[int], soft_cap: Optional[float],
+    block_q: int, block_kv: int,
+):
+    qi, ki = pl.program_id(2), pl.program_id(3)
+    q_start = qi * block_q
+    k_start = ki * block_kv
+
+    @pl.when(ki == 0)
+    def _():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # block-level reachability (static per (qi, ki) at runtime)
+    reachable = True
+    if causal:
+        reachable = k_start <= q_start + block_q - 1
+    if window is not None:
+        reachable = jnp.logical_and(reachable, k_start + block_kv - 1 > q_start - window)
+
+    @pl.when(reachable)
+    def _():
+        q = q_ref[0, 0].astype(jnp.float32)            # [bq, dh]
+        k = k_ref[0, 0].astype(jnp.float32)            # [bk, dh]
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        if soft_cap is not None:
+            s = soft_cap * jnp.tanh(s / soft_cap)
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_kv), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_kv), 1)
+        mask = jnp.ones((block_q, block_kv), jnp.bool_)
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[:, 0]                            # lane-replicated
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = jnp.broadcast_to(
+            (l_ref[:, 0] * corr + p.sum(axis=-1))[:, None], l_ref.shape
+        )
+        m_ref[...] = jnp.broadcast_to(m_new[:, None], m_ref.shape)
+        v = v_ref[0, 0].astype(jnp.float32)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jnp.dot(
+            p, v, preferred_element_type=jnp.float32
+        )
+
+    @pl.when(ki == pl.num_programs(3) - 1)
+    def _():
+        l = jnp.maximum(l_ref[:, 0], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "soft_cap", "block_q", "block_kv", "interpret"),
+)
+def flash_attention(
+    q: jax.Array,                   # [B, Sq, H, dh]
+    k: jax.Array,                   # [B, Skv, Hkv, dh]
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    soft_cap: Optional[float] = None,
+    block_q: int = 128,
+    block_kv: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    b, sq, h, dh = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    bq, bk = min(block_q, sq), min(block_kv, skv)
+    assert sq % bq == 0 and skv % bk == 0, f"seq ({sq},{skv}) must divide blocks ({bq},{bk})"
+    qt = q.transpose(0, 2, 1, 3)                        # [B, H, Sq, dh]
+    kt = k.transpose(0, 2, 1, 3)                        # [B, Hkv, Skv, dh]
+    vt = v.transpose(0, 2, 1, 3)
+    grid = (b, h, sq // bq, skv // bk)
+    kernel = functools.partial(
+        _flash_kernel,
+        scale=1.0 / math.sqrt(dh), causal=causal, window=window, soft_cap=soft_cap,
+        block_q=bq, block_kv=bk,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, dh), lambda b_, h_, qi, ki: (b_, h_, qi, 0)),
+            pl.BlockSpec((1, 1, bk, dh), lambda b_, h_, qi, ki: (b_, h_ // g, ki, 0)),
+            pl.BlockSpec((1, 1, bk, dh), lambda b_, h_, qi, ki: (b_, h_ // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, dh), lambda b_, h_, qi, ki: (b_, h_, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, sq, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, LANES), jnp.float32),       # m (lane-replicated)
+            pltpu.VMEM((bq, LANES), jnp.float32),       # l
+            pltpu.VMEM((bq, dh), jnp.float32),          # acc
+        ],
+        interpret=interpret,
+        name="flash_attention",
+    )(qt, kt, vt)
+    return out.transpose(0, 2, 1, 3)                    # [B, Sq, H, dh]

@@ -1,0 +1,136 @@
+"""Slot-LUT grouped matmul — the paper's compute hot-spot, TPU-native.
+
+Expert FFN compute addressed *through the rotating slot buffer*: the kernel
+receives per-expert token tiles, the slot weight store (HBM), and the
+expert->slot LUT as a **scalar-prefetch** operand, so Mosaic can issue the slot
+weight tile's HBM->VMEM DMA using ``lut[e]`` before the grid step runs. This is
+the TPU embodiment of the patent's "lookup-table mapping structure": rotation
+rewrites the LUT, compute never changes.
+
+int8 slots (Q4_K_M analog): weights stored int8, per-output-channel f32 scales
+applied to the MXU accumulator tile — dequantization costs one VPU multiply per
+output element and the slot buffer's HBM footprint halves vs bf16.
+
+Tiling: grid (E, C/bc, F/bf, D/bd), D innermost accumulating into a VMEM f32
+scratch tile; (bc, bf, bd) default to 128 — MXU-aligned on all three dims.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gmm_kernel(lut_ref, x_ref, w_ref, o_ref, acc_ref):
+    d = pl.program_id(3)
+
+    @pl.when(d == 0)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[0].astype(jnp.float32),
+        w_ref[0].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(d == pl.num_programs(3) - 1)
+    def _():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _gmm_kernel_int8(lut_ref, x_ref, w_ref, scale_ref, o_ref, acc_ref):
+    d = pl.program_id(3)
+
+    @pl.when(d == 0)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[0].astype(jnp.float32),
+        w_ref[0].astype(jnp.float32),          # int8 -> f32 in VREG
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(d == pl.num_programs(3) - 1)
+    def _():
+        # per-output-channel dequant on the accumulator tile
+        o_ref[0] = (acc_ref[...] * scale_ref[0]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_c", "block_f", "block_d", "interpret")
+)
+def slot_gmm(
+    x: jax.Array,                    # [E, C, D]
+    w: jax.Array,                    # [S+1, D, F]  (bf16 or int8)
+    lut: jax.Array,                  # [E] int32
+    scale: Optional[jax.Array] = None,   # [S+1, F] f32 (int8 mode)
+    *,
+    block_c: int = 128,
+    block_f: int = 128,
+    block_d: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    e, c, d = x.shape
+    s1, dw, f = w.shape
+    assert dw == d, (dw, d)
+    bc, bf, bd = min(block_c, c), min(block_f, f), min(block_d, d)
+    assert c % bc == 0 and f % bf == 0 and d % bd == 0, (
+        f"dims ({c},{f},{d}) must divide blocks ({bc},{bf},{bd})"
+    )
+    grid = (e, c // bc, f // bf, d // bd)
+    out_dtype = jnp.float32 if w.dtype == jnp.int8 else x.dtype
+
+    in_specs = [
+        pl.BlockSpec((1, bc, bd), lambda e, ci, fi, di, lut: (e, ci, di)),
+        pl.BlockSpec((1, bd, bf), lambda e, ci, fi, di, lut: (lut[e], di, fi)),
+    ]
+    kernel = _gmm_kernel
+    args = (lut, x, w)
+    if w.dtype == jnp.int8:
+        assert scale is not None, "int8 slots require per-channel scales"
+        in_specs.append(pl.BlockSpec((1, bf), lambda e, ci, fi, di, lut: (lut[e], fi)))
+        kernel = _gmm_kernel_int8
+        args = (lut, x, w, scale)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, bc, bf), lambda e, ci, fi, di, lut: (e, ci, fi)),
+        scratch_shapes=[pltpu.VMEM((bc, bf), jnp.float32)],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((e, c, f), out_dtype),
+        interpret=interpret,
+        name="slot_gmm",
+    )(*args)
+
+
+def moe_slot_ffn(
+    x: jax.Array,                    # [E, C, D] dispatched tokens
+    slots: dict,                     # w_gate/w_up/w_down (+ scale_*)
+    lut: jax.Array,
+    *,
+    interpret: bool = False,
+    **blocks,
+) -> jax.Array:
+    """Full expert FFN through the slot store: three slot_gmm calls + gating."""
+    def g(name, xx):
+        return slot_gmm(
+            xx, slots[name], lut, slots.get(f"scale_{name}"),
+            interpret=interpret, **blocks,
+        )
+
+    if "w_gate" in slots:
+        h = jax.nn.silu(g("w_gate", x)) * g("w_up", x)
+    else:
+        h = jax.nn.gelu(g("w_up", x))
+    return g("w_down", h.astype(x.dtype))

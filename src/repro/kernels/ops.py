@@ -1,0 +1,76 @@
+"""jit'd dispatch wrappers around the Pallas kernels.
+
+On this CPU container kernels run in ``interpret=True`` (the kernel body
+executes in Python — correctness only); on a TPU backend the same calls lower
+through Mosaic. Callers use these wrappers, never the kernels directly, so the
+backend switch is one place.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import decode_attention as _dec
+from repro.kernels import flash_attention as _fa
+from repro.kernels import moe_gmm as _gmm
+from repro.kernels import topk_gate as _tk
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def flash_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    soft_cap: Optional[float] = None,
+    block_q: int = 128,
+    block_kv: int = 128,
+) -> jax.Array:
+    return _fa.flash_attention(
+        q, k, v, causal=causal, window=window, soft_cap=soft_cap,
+        block_q=block_q, block_kv=block_kv, interpret=_interpret(),
+    )
+
+
+def decode_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array,
+    *,
+    cur_len: jax.Array,
+    window: Optional[int] = None,
+    soft_cap: Optional[float] = None,
+    block_kv: int = 256,
+) -> jax.Array:
+    """Adapter for the model's decode path: q [B,1,H,dh], cache k/v [B,S,Hkv,dh].
+
+    ``cur_len`` (scalar or per-row [B]) is the number of tokens BEFORE this one;
+    the new token was already written, so valid length is cur_len+1. Sliding
+    windows fall back to the jnp path in the caller (ring-position masking is
+    cache-layout specific).
+    """
+    b = q.shape[0]
+    lengths = jnp.broadcast_to(jnp.asarray(cur_len, jnp.int32), (b,)) + 1
+    out = _dec.decode_attention(
+        q[:, 0], k, v, lengths, soft_cap=soft_cap,
+        block_kv=block_kv, interpret=_interpret(),
+    )
+    return out[:, None]                                    # [B,1,H,dh]
+
+
+def moe_slot_ffn(x: jax.Array, slots: dict, lut: jax.Array, **blocks) -> jax.Array:
+    return _gmm.moe_slot_ffn(x, slots, lut, interpret=_interpret(), **blocks)
+
+
+def slot_gmm(
+    x: jax.Array, w: jax.Array, lut: jax.Array, scale: Optional[jax.Array] = None, **blocks
+) -> jax.Array:
+    return _gmm.slot_gmm(x, w, lut, scale, interpret=_interpret(), **blocks)
+
+
+def topk_gate(logits: jax.Array, k: int, *, normalize: bool = True
+              ) -> Tuple[jax.Array, jax.Array]:
+    return _tk.topk_gate(logits, k, normalize=normalize, interpret=_interpret())

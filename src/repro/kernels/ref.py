@@ -1,0 +1,87 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets in tests).
+
+No pallas imports here: these are the semantics, written for clarity not speed.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import reference_attention
+
+
+def slot_gmm_ref(
+    x: jax.Array,              # [E, C, D] per-expert token batches
+    w: jax.Array,              # [S+1, D, F] slot weights (trailing slot zero)
+    lut: jax.Array,            # [E] int32 expert -> slot
+    scale: Optional[jax.Array] = None,   # [S+1, F] int8 per-channel scales
+) -> jax.Array:
+    wg = jnp.take(w, lut, axis=0).astype(jnp.float32)            # [E, D, F]
+    out = jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32), wg)
+    if scale is not None:
+        out = out * jnp.take(scale, lut, axis=0)[:, None, :]
+    return out.astype(x.dtype if scale is None and w.dtype != jnp.int8 else jnp.float32)
+
+
+def moe_slot_ffn_ref(
+    x: jax.Array,              # [E, C, D]
+    slots: dict,               # w_gate/w_up/w_down (+ scale_* when int8)
+    lut: jax.Array,
+) -> jax.Array:
+    def g(name):
+        return slot_gmm_ref(x, slots[name], lut, slots.get(f"scale_{name}"))
+
+    if "w_gate" in slots:
+        h = jax.nn.silu(g("w_gate")) * g("w_up")
+    else:
+        h = jax.nn.gelu(g("w_up"))
+    wd = jnp.take(slots["w_down"], lut, axis=0).astype(jnp.float32)
+    out = jnp.einsum("ecf,efd->ecd", h.astype(jnp.float32), wd)
+    if "scale_w_down" in slots:
+        out = out * jnp.take(slots["scale_w_down"], lut, axis=0)[:, None, :]
+    return out
+
+
+def flash_attention_ref(
+    q: jax.Array,              # [B, Sq, H, dh]
+    k: jax.Array,              # [B, Skv, Hkv, dh]
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    soft_cap: Optional[float] = None,
+) -> jax.Array:
+    return reference_attention(q, k, v, causal=causal, window=window, soft_cap=soft_cap)
+
+
+def decode_attention_ref(
+    q: jax.Array,              # [B, H, dh]
+    k: jax.Array,              # [B, S, Hkv, dh]
+    v: jax.Array,
+    lengths: jax.Array,        # [B] int32: valid cache positions per batch row
+    *,
+    soft_cap: Optional[float] = None,
+) -> jax.Array:
+    b, h, dh = q.shape
+    s, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    qg = q.reshape(b, hkv, g, dh).astype(jnp.float32)
+    logits = jnp.einsum("bhgd,bshd->bhgs", qg, k.astype(jnp.float32)) / jnp.sqrt(dh)
+    if soft_cap is not None:
+        logits = soft_cap * jnp.tanh(logits / soft_cap)
+    valid = jnp.arange(s)[None, :] < lengths[:, None]            # [B, S]
+    logits = jnp.where(valid[:, None, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", probs, v.astype(jnp.float32))
+    return out.reshape(b, h, dh).astype(q.dtype)
+
+
+def topk_gate_ref(logits: jax.Array, k: int, *, normalize: bool = True
+                  ) -> Tuple[jax.Array, jax.Array]:
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    weights, ids = jax.lax.top_k(probs, k)
+    if normalize:
+        weights = weights / jnp.maximum(weights.sum(-1, keepdims=True), 1e-9)
+    return ids.astype(jnp.int32), weights

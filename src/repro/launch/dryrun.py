@@ -1,0 +1,236 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above run before ANY other import — jax locks the device count at
+first init, and the production meshes need 512 host placeholder devices.
+
+Each cell lowers the exact step the launchers run (train_step / prefill_step /
+serve_step), with the one source of truth for shardings
+(repro.distributed.sharding), then records:
+
+  * ``compiled.memory_analysis()``  — proves per-device residency fits;
+  * ``compiled.cost_analysis()``    — XLA's (loop-body-once) numbers, kept for
+    reference;
+  * loop-aware FLOPs / HBM bytes / collective bytes from
+    ``repro.launch.hlo_analysis`` over ``compiled.as_text()`` — the roofline
+    inputs (§Roofline).
+
+Cells run in SUBPROCESSES (one fresh jax per cell): a pathological cell can't
+poison the sweep, and compile memory is returned between cells. Results stream
+into a JSON file; finished cells are skipped on re-run (resumable).
+
+Usage:
+  python -m repro.launch.dryrun                     # full sweep, both meshes
+  python -m repro.launch.dryrun --arch dbrx-132b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --residency         # + rotary serve_step cells
+"""
+import argparse
+import json
+import subprocess
+import sys
+import time
+import traceback
+from typing import Dict, List, Optional
+
+
+def cell_id(arch: str, shape: str, mesh: str, variant: str) -> str:
+    return f"{arch}|{shape}|{mesh}|{variant}"
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, variant: str,
+             moe_impl: str) -> Dict:
+    """Lower+compile one cell in THIS process. Returns the result record."""
+    import jax
+
+    from repro.config import get_config, ShardingConfig
+    from repro.configs.shapes import SHAPES
+    from repro.launch import specs as S
+    from repro.launch.hlo_analysis import analyze_hlo
+    from repro.launch.mesh import make_production_mesh
+    from repro.models.params import analytic_params
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    multi = mesh_kind == "multi"
+    mesh = make_production_mesh(multi_pod=multi)
+    dp_axes = ("pod", "data") if multi else ("data",)
+    # decode variants: "base" = gathered expert weights (paper-faithful local
+    # path, collective-catastrophic at EP scale), "epdecode" = §Perf iteration
+    # (local experts + psum), "rotary" = slot-buffer residency.
+    impl = moe_impl
+    if shape.kind == "decode":
+        impl = "epsum" if variant == "epdecode" else "dense"
+    # NOTE: int8_ef pod compression is lowered separately (benchmarks/
+    # compression_bench.py) — the manual-pod shard_map around the full grad
+    # computation trips an XLA SPMD partitioner CHECK on this build
+    # (spmd_partitioner_util.cc:504); EXPERIMENTS.md §Perf logs the hypothesis.
+    sh = ShardingConfig(dp_axes=dp_axes, moe_impl=impl,
+                        remat_policy="full", grad_compression=None)
+
+    rec: Dict = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind, "variant": variant,
+        "chips": int(mesh.devices.size), "moe_impl": moe_impl,
+        "seq_len": shape.seq_len, "global_batch": shape.global_batch,
+        "kind": shape.kind,
+    }
+    t0 = time.time()
+    if shape.kind == "train":
+        fn, args, kw = S.train_cell(cfg, shape, mesh, sh)
+    elif shape.kind == "prefill":
+        fn, args, kw = S.prefill_cell(cfg, shape, mesh, sh)
+    else:
+        slots = 0
+        if variant == "rotary":
+            # paper budget: ~1/4 of experts resident per chip + top_k margin
+            slots = max(cfg.moe.top_k + 2, cfg.moe.num_experts // 4)
+            rec["residency_slots"] = slots
+        fn, args, kw = S.decode_cell(cfg, shape, mesh, sh, residency_slots=slots)
+
+    lowered = jax.jit(fn, **kw).lower(*args)
+    rec["lower_s"] = round(time.time() - t0, 2)
+    t1 = time.time()
+    compiled = lowered.compile()
+    rec["compile_s"] = round(time.time() - t1, 2)
+
+    ma = compiled.memory_analysis()
+    rec["memory"] = {
+        "argument_GiB": ma.argument_size_in_bytes / 2**30,
+        "output_GiB": ma.output_size_in_bytes / 2**30,
+        "temp_GiB": ma.temp_size_in_bytes / 2**30,
+        "alias_GiB": ma.alias_size_in_bytes / 2**30,
+        "peak_GiB": (
+            ma.argument_size_in_bytes + ma.output_size_in_bytes
+            + ma.temp_size_in_bytes - ma.alias_size_in_bytes
+        ) / 2**30,
+    }
+    ca = compiled.cost_analysis() or {}
+    rec["xla_cost"] = {k: float(v) for k, v in ca.items()
+                      if k in ("flops", "bytes accessed")}
+    t2 = time.time()
+    text = compiled.as_text()
+    rec["hlo"] = analyze_hlo(text).to_dict()
+    rec["analyze_s"] = round(time.time() - t2, 2)
+    # archive the partitioned HLO so the roofline can be re-derived offline
+    import gzip
+    hlo_dir = os.environ.get("REPRO_HLO_DIR", "artifacts/hlo")
+    os.makedirs(hlo_dir, exist_ok=True)
+    fname = f"{arch}_{shape_name}_{mesh_kind}_{variant}.hlo.gz"
+    with gzip.open(os.path.join(hlo_dir, fname), "wt") as f:
+        f.write(text)
+    rec["hlo_path"] = os.path.join(hlo_dir, fname)
+
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    n_active = analytic_params(cfg, active_only=cfg.has_moe)
+    mf = 6.0 * n_active * tokens if shape.kind == "train" else 2.0 * n_active * tokens
+    rec["model_flops_global"] = mf
+    rec["model_params"] = analytic_params(cfg)
+    rec["model_params_active"] = n_active
+    rec["ok"] = True
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="artifacts/dryrun.json")
+    ap.add_argument("--residency", action="store_true",
+                    help="also lower rotary-residency serve_step for MoE archs")
+    ap.add_argument("--moe-impl", default="epsum")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--timeout", type=int, default=3600)
+    ap.add_argument("--single-cell", nargs=4, metavar=("ARCH", "SHAPE", "MESH", "VARIANT"),
+                    help="internal: run one cell in-process and print JSON")
+    args = ap.parse_args()
+
+    if args.single_cell:
+        arch, shape, mesh, variant = args.single_cell
+        try:
+            rec = run_cell(arch, shape, mesh, variant, args.moe_impl)
+        except Exception as e:  # noqa: BLE001
+            rec = {
+                "arch": arch, "shape": shape, "mesh": mesh, "variant": variant,
+                "ok": False, "error": f"{type(e).__name__}: {e}",
+                "trace": traceback.format_exc()[-2000:],
+            }
+        print("\n===CELL_RESULT===")
+        print(json.dumps(rec))
+        return
+
+    # ---- sweep driver ------------------------------------------------
+    from repro.config import get_config
+    from repro.configs import ALL_ARCHS
+    from repro.configs.shapes import SHAPES, shape_applies
+
+    archs = list(ALL_ARCHS) if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    # always load existing results; --force only forces RE-RUNNING selected
+    # cells (never discards other archs' records)
+    results: Dict[str, Dict] = {}
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+
+    cells: List = []
+    for arch in archs:
+        cfg = get_config(arch)
+        for shape in shapes:
+            if not shape_applies(cfg, SHAPES[shape]):
+                skip_key = cell_id(arch, shape, "-", "skip")
+                results.setdefault(skip_key, {
+                    "arch": arch, "shape": shape, "ok": True, "skipped": True,
+                    "reason": "full-attention arch: long_500k requires a "
+                              "sub-quadratic path (DESIGN.md §6)",
+                })
+                continue
+            for mesh in meshes:
+                cells.append((arch, shape, mesh, "base"))
+                if cfg.has_moe and SHAPES[shape].kind == "decode":
+                    cells.append((arch, shape, mesh, "epdecode"))
+                    if args.residency:
+                        cells.append((arch, shape, mesh, "rotary"))
+
+    print(f"dry-run: {len(cells)} cells -> {args.out}", flush=True)
+    for i, (arch, shape, mesh, variant) in enumerate(cells):
+        key = cell_id(arch, shape, mesh, variant)
+        if key in results and results[key].get("ok") and not args.force:
+            print(f"[{i+1}/{len(cells)}] {key} cached", flush=True)
+            continue
+        print(f"[{i+1}/{len(cells)}] {key} ...", flush=True)
+        t0 = time.time()
+        cmd = [sys.executable, "-m", "repro.launch.dryrun",
+               "--single-cell", arch, shape, mesh, variant,
+               "--moe-impl", args.moe_impl]
+        try:
+            proc = subprocess.run(
+                cmd, capture_output=True, text=True, timeout=args.timeout,
+                env={**os.environ, "PYTHONPATH": os.environ.get("PYTHONPATH", "src")},
+            )
+            tail = proc.stdout.rsplit("===CELL_RESULT===", 1)
+            if len(tail) == 2:
+                rec = json.loads(tail[1])
+            else:
+                rec = {"ok": False, "error": f"no result (rc={proc.returncode})",
+                       "stderr": proc.stderr[-2000:]}
+        except subprocess.TimeoutExpired:
+            rec = {"ok": False, "error": f"timeout {args.timeout}s"}
+        rec.update({"arch": arch, "shape": shape, "mesh": mesh, "variant": variant})
+        rec["wall_s"] = round(time.time() - t0, 1)
+        results[key] = rec
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+        status = "OK" if rec.get("ok") else f"FAIL: {rec.get('error', '?')[:120]}"
+        print(f"    {status} ({rec['wall_s']}s)", flush=True)
+
+    n_ok = sum(1 for r in results.values() if r.get("ok"))
+    print(f"done: {n_ok}/{len(results)} ok", flush=True)
+
+
+if __name__ == "__main__":
+    main()

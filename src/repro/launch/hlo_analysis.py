@@ -1,0 +1,373 @@
+"""HLO-text analyzer: loop-aware FLOPs, HBM-byte and collective-byte counts.
+
+``compiled.cost_analysis()`` counts while-loop bodies ONCE (verified on this
+jax build), so every scanned layer/microbatch/chunk would be undercounted by
+its trip count. This module parses ``compiled.as_text()`` instead:
+
+  * while ops carry ``backend_config={"known_trip_count":{"n":...}}`` — a call
+    graph walk assigns every computation its cumulative execution multiplier;
+  * dot ops contribute ``2 * prod(out) * prod(contracting)`` FLOPs (operand
+    shapes resolved from the per-computation symbol table);
+  * collective ops contribute wire bytes with ring factors:
+    all-reduce 2(n-1)/n * operand, all-gather (n-1)/n * result,
+    reduce-scatter (n-1)/n * operand, all-to-all (n-1)/n, permute 1.0 —
+    n parsed from replica_groups (both ``{{0,1},..}`` and ``[g,n]<=[..]`` forms);
+  * HBM bytes sum operands+outputs of *scheduled* ops only (ops inside
+    kLoop-fusion bodies move through registers/VMEM, not HBM).
+
+All numbers are per-device (the module is post-SPMD-partitioning).
+"""
+from __future__ import annotations
+
+import json
+import math
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.+?)\s+([a-z][a-z0-9\-]*)\("
+)
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%([\w.\-]+)\s+\(.*\)\s*->.*\{")
+_PARAM_RE = re.compile(r"%([\w.\-]+)\s*=\s*(.+?)\s+parameter\(")
+_CALL_ATTR_RE = re.compile(
+    r"(?:calls=|condition=|body=|to_apply=|true_computation=|false_computation=)%([\w.\-]+)"
+)
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_GROUPS_EXPL_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def shape_bytes(type_str: str) -> int:
+    """Sum bytes over every dtype[dims] group in a type string (handles tuples)."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def shape_dims(type_str: str) -> List[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    dims = m.group(2)
+    return [int(d) for d in dims.split(",")] if dims else []
+
+
+@dataclass
+class Op:
+    name: str
+    type_str: str
+    opcode: str
+    line: str
+
+
+@dataclass
+class Computation:
+    name: str
+    ops: List[Op] = field(default_factory=list)
+    symbols: Dict[str, str] = field(default_factory=dict)   # name -> type str
+
+
+def parse_module(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry: Optional[str] = None
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        mc = _COMP_RE.match(line)
+        if mc:
+            cur = Computation(mc.group(1))
+            comps[cur.name] = cur
+            if line.startswith("ENTRY"):
+                entry = cur.name
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        mo = _OP_RE.match(line)
+        if mo:
+            op = Op(mo.group(1), mo.group(2), mo.group(3), line)
+            cur.ops.append(op)
+            cur.symbols[op.name] = op.type_str
+    return comps, entry
+
+
+def _multipliers(comps: Dict[str, Computation], entry: str) -> Dict[str, float]:
+    mult: Dict[str, float] = defaultdict(float)
+    fusion_body: Dict[str, bool] = defaultdict(bool)
+
+    def visit(name: str, m: float, in_fusion: bool) -> None:
+        mult[name] += m
+        fusion_body[name] |= in_fusion
+        comp = comps.get(name)
+        if comp is None:
+            return
+        for op in comp.ops:
+            if op.opcode == "while":
+                trip = 1
+                mt = _TRIP_RE.search(op.line)
+                if mt:
+                    trip = int(mt.group(1))
+                body = re.search(r"body=%([\w.\-]+)", op.line)
+                cond = re.search(r"condition=%([\w.\-]+)", op.line)
+                if body:
+                    visit(body.group(1), m * trip, in_fusion)
+                if cond:
+                    visit(cond.group(1), m * (trip + 1), in_fusion)
+            elif op.opcode == "fusion":
+                mc = re.search(r"calls=%([\w.\-]+)", op.line)
+                if mc:
+                    visit(mc.group(1), m, True)
+            elif op.opcode == "conditional":
+                mb = _BRANCHES_RE.search(op.line)
+                if mb:
+                    for b in re.findall(r"%([\w.\-]+)", mb.group(1)):
+                        visit(b, m, in_fusion)          # upper bound: all branches
+                else:
+                    for c in _CALL_ATTR_RE.findall(op.line):
+                        visit(c, m, in_fusion)
+            elif op.opcode in ("call", "custom-call", "reduce", "scatter",
+                               "map", "sort", "select-and-scatter"):
+                for c in _CALL_ATTR_RE.findall(op.line):
+                    visit(c, m, in_fusion)
+
+    visit(entry, 1.0, False)
+    return dict(mult), dict(fusion_body)
+
+
+def _dot_flops(op: Op, comp: Computation) -> float:
+    out_dims = shape_dims(op.type_str)
+    operands = re.findall(r"\(%([\w.\-]+)[,)]", op.line)
+    ml = re.search(r"dot\(%([\w.\-]+),\s*%([\w.\-]+)\)", op.line)
+    if not ml:
+        return 0.0
+    lhs_t = comp.symbols.get(ml.group(1))
+    if lhs_t is None:
+        return 0.0
+    lhs_dims = shape_dims(lhs_t)
+    mc = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.line)
+    contract = 1
+    if mc and mc.group(1):
+        for d in mc.group(1).split(","):
+            contract *= lhs_dims[int(d)] if int(d) < len(lhs_dims) else 1
+    return 2.0 * math.prod(out_dims or [0]) * contract
+
+
+def _group_size(line: str) -> int:
+    me = _GROUPS_EXPL_RE.search(line)
+    if me:
+        return len(me.group(1).split(","))
+    mi = _GROUPS_IOTA_RE.search(line)
+    if mi:
+        return int(mi.group(2))                      # [groups, group_size]<=[N]
+    return 1
+
+
+def _collective_bytes(op: Op, comp: Computation) -> Tuple[float, int]:
+    """Wire bytes (per device) for one collective op + group size."""
+    n = _group_size(op.line)
+    if n <= 1 and op.opcode != "collective-permute":
+        return 0.0, n
+    if op.opcode == "all-gather":
+        base = shape_bytes(op.type_str)              # result
+        factor = (n - 1) / n
+    elif op.opcode == "all-reduce":
+        base = _operand_bytes(op, comp)
+        factor = 2.0 * (n - 1) / n
+    elif op.opcode in ("reduce-scatter", "all-to-all"):
+        base = _operand_bytes(op, comp)
+        factor = (n - 1) / n
+    else:                                            # collective-permute
+        base = _operand_bytes(op, comp)
+        factor = 1.0
+    return base * factor, n
+
+
+def _operand_bytes(op: Op, comp: Computation) -> int:
+    total = 0
+    for name in re.findall(r"%([\w.\-]+)", op.line.split("(", 1)[1]):
+        t = comp.symbols.get(name)
+        if t is not None:
+            total += shape_bytes(t)
+    return total or shape_bytes(op.type_str)
+
+
+@dataclass
+class HloAnalysis:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collectives: Dict[str, float] = field(default_factory=dict)   # opcode -> bytes
+    collective_counts: Dict[str, int] = field(default_factory=dict)
+    dots: int = 0
+
+    def to_dict(self) -> Dict:
+        return {
+            "flops": self.flops,
+            "hbm_bytes": self.hbm_bytes,
+            "collective_bytes": self.collective_bytes,
+            "collectives": self.collectives,
+            "collective_counts": self.collective_counts,
+            "dots": self.dots,
+        }
+
+
+def analyze_hlo(text: str) -> HloAnalysis:
+    comps, entry = parse_module(text)
+    if entry is None:
+        return HloAnalysis()
+    mult, fusion_body = _multipliers(comps, entry)
+    out = HloAnalysis()
+    for cname, comp in comps.items():
+        m = mult.get(cname, 0.0)
+        if m == 0.0:
+            continue
+        scheduled = not fusion_body.get(cname, False)
+        for op in comp.ops:
+            if op.opcode == "dot":
+                out.flops += m * _dot_flops(op, comp)
+                out.dots += 1
+            if op.opcode in COLLECTIVES:
+                b, _ = _collective_bytes(op, comp)
+                out.collective_bytes += m * b
+                out.collectives[op.opcode] = out.collectives.get(op.opcode, 0.0) + m * b
+                out.collective_counts[op.opcode] = (
+                    out.collective_counts.get(op.opcode, 0) + int(m)
+                )
+            if scheduled and op.opcode not in (
+                "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+                # loop-carry/aliasing copies: the TPU memory scheduler elides
+                # these; counting them would dwarf real HBM traffic
+                "copy", "copy-start", "copy-done",
+                # the while op's carries stay in place; its body is counted
+                "while",
+            ):
+                if op.opcode in ("dynamic-slice", "gather"):
+                    # reads only the slice, not the whole operand
+                    b = 2 * shape_bytes(op.type_str)
+                elif op.opcode in ("dynamic-update-slice", "scatter"):
+                    # in-place: writes (and RMWs) only the update region
+                    upd = _update_bytes(op, comp)
+                    b = 2 * upd
+                elif op.opcode == "fusion":
+                    b = _fusion_bytes(op, comp, comps)
+                else:
+                    b = shape_bytes(op.type_str) + _operand_bytes(op, comp)
+                out.hbm_bytes += m * b
+    return out
+
+
+def _fusion_bytes(op: Op, comp: Computation, comps: Dict[str, Computation]) -> float:
+    """HBM bytes of one fusion: output + per-operand reads, where an operand
+    consumed ONLY by dynamic-slice/gather inside the fused computation counts
+    the slice size, not the full array (the layer-stack weight slices)."""
+    mcall = re.search(r"calls=%([\w.\-]+)", op.line)
+    operands = re.findall(r"%([\w.\-]+)", op.line.split("(", 1)[1].split(")", 1)[0])
+    inner = comps.get(mcall.group(1)) if mcall else None
+    out_b = shape_bytes(op.type_str)
+    if inner is not None and inner.ops:
+        body_ops = [o for o in inner.ops if o.opcode != "parameter"]
+        # pure dtype/layout fusions (convert/transpose/copy chains): Mosaic
+        # fuses these into the producing/consuming GEMM on TPU — no HBM trip.
+        # (The CPU backend materializes f32 copies of bf16 weights; counting
+        # them would triple every bf16 model's memory term.)
+        if body_ops and all(
+            o.opcode in ("convert", "bitcast", "copy", "transpose", "reshape",
+                         "broadcast")
+            for o in body_ops
+        ):
+            return 0.0
+        # slice-extraction fusions (DS/gather + dtype/layout ops only): the
+        # slice moves once; the f32 upcast copy is CPU legalization that a
+        # bf16 MXU consumes directly
+        slicers = [o for o in body_ops if o.opcode in ("dynamic-slice", "gather")]
+        if slicers and all(
+            o.opcode in ("dynamic-slice", "gather") + _PASSTHROUGH
+            for o in body_ops
+        ):
+            return 2.0 * sum(shape_bytes(o.type_str) for o in slicers)
+        # a DUS anywhere in the fusion -> in-place update of the big operand;
+        # only the update region moves
+        dus = [o for o in body_ops if o.opcode == "dynamic-update-slice"]
+        if dus:
+            out_b = sum(2 * _update_bytes(o, inner) for o in dus)
+    total = float(out_b)
+    if inner is None:
+        return total + _operand_bytes(op, comp)
+    params = [o for o in inner.ops if o.opcode == "parameter"]
+    def pidx(o):
+        mm = re.search(r"parameter\((\d+)\)", o.line)
+        return int(mm.group(1)) if mm else 0
+    params.sort(key=pidx)
+    for i, name in enumerate(operands):
+        t = comp.symbols.get(name)
+        full = shape_bytes(t) if t else 0
+        if i < len(params):
+            consumers = _effective_consumers(params[i].name, inner)
+            if consumers and all(
+                c.opcode in ("dynamic-slice", "gather") for c in consumers
+            ):
+                full = sum(shape_bytes(c.type_str) for c in consumers)
+            elif consumers and all(
+                c.opcode == "dynamic-update-slice" for c in consumers
+            ):
+                full = 0        # aliased destination: write counted via out_b
+        total += full
+    return total
+
+
+_PASSTHROUGH = ("convert", "bitcast", "copy", "reshape", "transpose", "broadcast")
+
+
+def _effective_consumers(pname: str, inner: Computation) -> List[Op]:
+    """Transitive consumers of a fused parameter, looking THROUGH dtype/layout
+    ops (a bf16 cache converted to f32 before its DUS is still just the DUS's
+    aliased destination on TPU)."""
+    out: List[Op] = []
+    seen = set()
+    frontier = [pname]
+    while frontier:
+        cur = frontier.pop()
+        if cur in seen:
+            continue
+        seen.add(cur)
+        for o in inner.ops:
+            if o.opcode == "parameter" or o.name == cur:
+                continue
+            if re.search(rf"%{re.escape(cur)}\b", o.line.split("=", 1)[-1]):
+                if o.opcode in _PASSTHROUGH:
+                    frontier.append(o.name)
+                else:
+                    out.append(o)
+    return out
+
+
+def _update_bytes(op: Op, comp: Computation) -> int:
+    """Bytes of the update operand of a DUS/scatter (2nd operand)."""
+    names = re.findall(r"%([\w.\-]+)", op.line.split("(", 1)[1])
+    if len(names) >= 2:
+        t = comp.symbols.get(names[1])
+        if t is not None:
+            return shape_bytes(t)
+    return shape_bytes(op.type_str)

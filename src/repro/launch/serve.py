@@ -1,0 +1,81 @@
+"""Serving launcher: ``python -m repro.launch.serve --arch <id> [...]``.
+
+Two engines (DESIGN.md §2):
+  * ``--engine rotary``  — the paper-faithful per-layer engine
+    (repro.core.engine.RotaryEngine): host-resident experts, rotating slots,
+    hidden-state-guided prefetch, host-GEMM miss correction. MoE archs only.
+  * ``--engine batch``   — compiled continuous-batching engine
+    (repro.serving.ServingEngine), any arch; optional rotary residency
+    rotating between steps.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--engine", default="batch", choices=["batch", "rotary"])
+    ap.add_argument("--residency", default="full",
+                    choices=["full", "rotary", "lru", "static"])
+    ap.add_argument("--slots", type=int, default=0, help="residency slots per layer")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--prompt-len", type=int, default=12)
+    ap.add_argument("--batch-slots", type=int, default=4)
+    ap.add_argument("--cache-len", type=int, default=256)
+    ap.add_argument("--quantization", default=None, choices=[None, "int8"])
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    from repro.config import ResidencyConfig, get_config
+    from repro.configs import reduce_for_smoke
+    from repro.models import init_params
+    from repro.models.transformer import Runtime
+    from repro.serving import SamplerConfig, ServingEngine
+
+    cfg = reduce_for_smoke(get_config(args.arch))
+    params = init_params(cfg, jax.random.PRNGKey(args.seed))
+    rt = Runtime(cache_len=args.cache_len)
+    rng = np.random.default_rng(args.seed)
+    slots = args.slots or (cfg.moe.num_experts * 3 // 4 if cfg.has_moe else 0)
+    rescfg = None
+    if args.residency != "full" and cfg.has_moe:
+        rescfg = ResidencyConfig(mode=args.residency, num_slots=slots,
+                                 quantization=args.quantization)
+
+    if args.engine == "rotary":
+        from repro.core import RotaryEngine
+
+        assert cfg.has_moe, "--engine rotary requires an MoE arch"
+        eng = RotaryEngine(
+            cfg, params, rescfg or ResidencyConfig(mode="rotary", num_slots=slots),
+            rt=rt, batch=1,
+        )
+        for i in range(args.requests):
+            prompt = rng.integers(0, cfg.vocab_size, (1, args.prompt_len)).astype(np.int32)
+            out = eng.generate(prompt, args.max_new)
+            print(f"req {i}: {out[0].tolist()}")
+        print("stats:", eng.stats.summary())
+        return
+
+    eng = ServingEngine(
+        cfg, params, rt=rt, num_slots=args.batch_slots, residency=rescfg,
+        sampler=SamplerConfig(temperature=args.temperature, seed=args.seed),
+    )
+    for _ in range(args.requests):
+        plen = int(rng.integers(4, args.prompt_len + 1))
+        eng.submit(rng.integers(0, cfg.vocab_size, plen), args.max_new)
+    done = eng.run()
+    for r in done:
+        print(f"req {r.uid}: prompt_len={len(r.prompt)} -> {r.output}")
+    print("stats:", eng.stats.summary())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,232 @@
+"""input_specs(): ShapeDtypeStruct stand-ins + shardings for every dry-run cell.
+
+No device allocation happens here — states and train states come from
+``jax.eval_shape`` over the real constructors, so the dry-run lowers exactly
+what the launchers run.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.config.base import ModelConfig, RunConfig, ShapeConfig, ShardingConfig
+from repro.distributed import sharding as shrules
+from repro.models import transformer as tfm
+from repro.models.transformer import Runtime
+from repro.training.trainer import init_train_state, make_train_step
+
+
+def sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def runtime_for(cfg: ModelConfig, shape: ShapeConfig, mesh: Optional[Mesh],
+                sh: ShardingConfig) -> Runtime:
+    cache_len = shape.seq_len if shape.kind in ("decode",) else shape.seq_len
+    return Runtime(sharding=sh, mesh=mesh, cache_len=cache_len,
+                   q_chunk=512, kv_chunk=1024, loss_chunk=512)
+
+
+def token_seq_len(cfg: ModelConfig, shape: ShapeConfig) -> int:
+    """Frontend archs consume part of the sequence budget as embeddings."""
+    f = cfg.frontend_len if cfg.frontend is not None else 0
+    return shape.seq_len - f
+
+
+def num_microbatches(cfg: ModelConfig, shape: ShapeConfig, mesh: Optional[Mesh],
+                     sh: ShardingConfig) -> int:
+    """One row per device per microbatch (~4k tokens at 4k seq): activation
+    residency stays bounded for every arch in the pool; see §Perf for the
+    microbatch-size iteration."""
+    if mesh is None:
+        return 1
+    dp = shrules.dp_size(mesh, sh)
+    return max(shape.global_batch // dp, 1)
+
+
+def use_fsdp(cfg: ModelConfig, mesh: Optional[Mesh], sh: ShardingConfig) -> bool:
+    """Shard param storage over dp too when TP-only storage exceeds ~6 GB/chip."""
+    if mesh is None:
+        return False
+    from repro.models.params import analytic_params
+
+    tp = mesh.shape[sh.tp_axis]
+    return analytic_params(cfg) * 2 / tp > 6e9
+
+
+# ---------------------------------------------------------------------------
+# Cells
+# ---------------------------------------------------------------------------
+def train_cell(
+    cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh, sh: ShardingConfig,
+    run: Optional[RunConfig] = None,
+) -> Tuple[Any, Tuple, Dict]:
+    """Returns (fn, arg_structs, kwargs-for-jit) for a train_step lowering."""
+    run = run or RunConfig()
+    rt = runtime_for(cfg, shape, mesh, sh)
+    nm = num_microbatches(cfg, shape, mesh, sh)
+    fsdp = use_fsdp(cfg, mesh, sh)
+    pod_comp = sh.grad_compression == "int8_ef" and "pod" in mesh.shape
+
+    s_tok = token_seq_len(cfg, shape)
+    params_shape = jax.eval_shape(
+        lambda: tfm.init_params(cfg, jax.random.PRNGKey(0))
+    )
+    state_shape = jax.eval_shape(
+        lambda p: init_train_state(cfg, p, sh, pod_count=dict(mesh.shape).get("pod", 1)),
+        params_shape,
+    )
+    state_shardings = shrules.make_train_state_shardings(
+        cfg, mesh, sh, state_shape, fsdp=fsdp
+    )
+    b = shape.global_batch
+    args = [state_shape, sds((b, s_tok), jnp.int32), sds((b, s_tok), jnp.int32)]
+    in_shardings = [
+        state_shardings,
+        NamedSharding(mesh, shrules.batch_spec(sh, mesh, b)),
+        NamedSharding(mesh, shrules.batch_spec(sh, mesh, b)),
+    ]
+    if cfg.frontend is not None:
+        args.append(sds((b, cfg.frontend_len, cfg.frontend_dim), jnp.float32))
+        in_shardings.append(NamedSharding(mesh, shrules.frontend_spec(sh, mesh, b)))
+
+    step = make_train_step(
+        cfg, rt, run, num_micro=nm,
+        pod_compression=pod_comp, pod_count=mesh.shape.get("pod", 1),
+    )
+    jit_kwargs = dict(
+        in_shardings=tuple(in_shardings),
+        donate_argnums=(0,),
+    )
+    return step, tuple(args), jit_kwargs
+
+
+def prefill_cell(
+    cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh, sh: ShardingConfig
+) -> Tuple[Any, Tuple, Dict]:
+    rt = runtime_for(cfg, shape, mesh, sh)
+    s_tok = token_seq_len(cfg, shape)
+    b = shape.global_batch
+
+    def prefill_step(params, tokens, frontend=None):
+        return tfm.prefill_model(cfg, params, tokens, rt, frontend)
+
+    params_shape = jax.eval_shape(lambda: tfm.init_params(cfg, jax.random.PRNGKey(0)))
+    p_shardings = shrules.make_param_shardings(
+        cfg, mesh, sh, params_shape, fsdp=use_fsdp(cfg, mesh, sh)
+    )
+    args = [params_shape, sds((b, s_tok), jnp.int32)]
+    in_shardings = [p_shardings, NamedSharding(mesh, shrules.batch_spec(sh, mesh, b))]
+    if cfg.frontend is not None:
+        args.append(sds((b, cfg.frontend_len, cfg.frontend_dim), jnp.float32))
+        in_shardings.append(NamedSharding(mesh, shrules.frontend_spec(sh, mesh, b)))
+    return prefill_step, tuple(args), dict(in_shardings=tuple(in_shardings))
+
+
+def decode_cell(
+    cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh, sh: ShardingConfig,
+    *, residency_slots: int = 0,
+) -> Tuple[Any, Tuple, Dict]:
+    """serve_step: one new token against a seq_len KV cache.
+
+    ``residency_slots > 0`` lowers the rotary-residency variant: per-MoE-layer
+    slot buffers (+1 zero miss slot) and LUTs enter as donated step inputs.
+    """
+    rt = runtime_for(cfg, shape, mesh, sh)
+    b = shape.global_batch
+
+    params_shape = jax.eval_shape(lambda: tfm.init_params(cfg, jax.random.PRNGKey(0)))
+    if residency_slots > 0:
+        params_shape = _strip_experts(params_shape)
+    state_shape = jax.eval_shape(lambda: tfm.zero_state(cfg, b, rt.cache_len))
+    # dbrx-class: bf16 params exceed TP-sharded HBM; store FSDP-style
+    # (per-layer all-gather) — §Perf iterates with int8 weights instead
+    p_shardings = shrules.make_param_shardings(
+        cfg, mesh, sh, params_shape, fsdp=use_fsdp(cfg, mesh, sh)
+    )
+    s_shardings = shrules.make_state_shardings(cfg, mesh, sh, state_shape, shape)
+
+    res_shape = None
+    if residency_slots > 0:
+        res_shape = _residency_structs(cfg, residency_slots)
+
+    def serve_step(params, token, state, lengths, residency=None):
+        return tfm.decode_model(cfg, params, token, state, lengths, rt,
+                                residency=residency)
+
+    args = [
+        params_shape,
+        sds((b,), jnp.int32),
+        state_shape,
+        sds((b,), jnp.int32),
+    ]
+    in_shardings = [
+        p_shardings,
+        NamedSharding(mesh, shrules.token_spec(sh, mesh, b)),
+        s_shardings,
+        NamedSharding(mesh, P()),
+    ]
+    if res_shape is not None:
+        args.append(res_shape)
+        in_shardings.append(_residency_shardings(cfg, res_shape, mesh, sh))
+    return serve_step, tuple(args), dict(
+        in_shardings=tuple(in_shardings), donate_argnums=(2,),
+    )
+
+
+def _strip_experts(params_shape: Any) -> Any:
+    """Residency mode: the full expert store lives in HOST memory, not in the
+    device params (DESIGN.md §2) — remove it from the lowered signature."""
+    def strip(d):
+        if isinstance(d, dict):
+            return {k: strip(v) for k, v in d.items() if k != "experts"}
+        if isinstance(d, tuple):
+            return tuple(strip(v) for v in d)
+        if isinstance(d, list):
+            return [strip(v) for v in d]
+        return d
+
+    return strip(params_shape)
+
+
+def _residency_structs(cfg: ModelConfig, num_slots: int) -> Any:
+    m = cfg.moe
+    dt = jnp.dtype(cfg.dtype)
+    names = (("w_gate", "w_up", "w_down") if cfg.mlp == "swiglu" else ("w_up", "w_down"))
+    segs = []
+    for unit, reps in cfg.segments:
+        if not any(k == "attn_moe" for k in unit):
+            segs.append({})
+            continue
+        slots = {}
+        for n in names:
+            shp = (
+                (reps, num_slots + 1, m.expert_d_ff, cfg.d_model)
+                if n == "w_down"
+                else (reps, num_slots + 1, cfg.d_model, m.expert_d_ff)
+            )
+            slots[n] = sds(shp, dt)
+        segs.append({"slots": slots, "lut": sds((reps, m.num_experts), jnp.int32)})
+    return tuple(segs)
+
+
+def _residency_shardings(cfg: ModelConfig, res_shape: Any, mesh: Mesh,
+                         sh: ShardingConfig) -> Any:
+    """Slot buffers shard the FFN dim over the model axis (slot dim stays whole:
+    any expert can land in any slot on every chip's HBM — per-chip residency,
+    DESIGN.md §2 note (i))."""
+    def spec(path, leaf):
+        keys = shrules._path_keys(path)
+        name = keys[-1] if keys else ""
+        if name == "lut":
+            return NamedSharding(mesh, P(None, None))
+        if name == "w_down":
+            return NamedSharding(mesh, P(None, None, sh.tp_axis, None))
+        return NamedSharding(mesh, P(None, None, None, sh.tp_axis))
+
+    return jax.tree_util.tree_map_with_path(spec, res_shape)

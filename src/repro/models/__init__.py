@@ -1,0 +1,12 @@
+"""Model stack: layers, attention, MoE, recurrent blocks, and the assembler."""
+from repro.models.transformer import (  # noqa: F401
+    Runtime,
+    decode_model,
+    forward_train,
+    init_params,
+    lm_logits,
+    lm_loss,
+    prefill_model,
+    zero_state,
+)
+from repro.models.params import analytic_params, count_params, model_flops, param_summary  # noqa: F401

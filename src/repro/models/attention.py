@@ -1,0 +1,351 @@
+"""Grouped-query attention: training (chunked causal), prefill and decode paths.
+
+The compiled path never materializes the full [S, S] score matrix: training and
+prefill use a q-chunk x kv-chunk online-softmax scan (flash-attention dataflow in
+pure jnp, memory O(q_chunk * kv_chunk)), with `lax.cond` block skipping so fully
+masked blocks cost nothing at runtime. The Pallas kernel in
+``repro.kernels.flash_attention`` implements the same dataflow with explicit VMEM
+tiling for real TPUs; ``repro.kernels.ref`` reuses the functions here as oracles.
+
+Decode is a static-shape single-token step against a fixed-capacity cache:
+``cache_len`` positions are always addressed, with positions ``>= cur_len`` masked.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import AttentionConfig
+from repro.models.layers import Params, apply_rope, dense_init, rms_norm_headdim, rope_angles
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+def init_attention(key: jax.Array, d_model: int, acfg: AttentionConfig, dtype: Any) -> Params:
+    kq, kk, kv, ko, _ = jax.random.split(key, 5)
+    h, hkv, dh = acfg.num_heads, acfg.num_kv_heads, acfg.head_dim
+    p: Params = {
+        "wq": dense_init(kq, (d_model, h * dh), dtype),
+        "wk": dense_init(kk, (d_model, hkv * dh), dtype),
+        "wv": dense_init(kv, (d_model, hkv * dh), dtype),
+        "wo": dense_init(ko, (h * dh, d_model), dtype, fan_in=h * dh),
+    }
+    if acfg.qk_norm:
+        p["q_norm"] = jnp.ones((dh,), dtype)
+        p["k_norm"] = jnp.ones((dh,), dtype)
+    return p
+
+
+def _project_qkv(
+    p: Params, acfg: AttentionConfig, x: jax.Array, positions: jax.Array
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """x [B, S, D] -> q [B, S, H, dh], k/v [B, S, Hkv, dh] with RoPE + optional qk-norm."""
+    b, s, _ = x.shape
+    h, hkv, dh = acfg.num_heads, acfg.num_kv_heads, acfg.head_dim
+    q = (x @ p["wq"]).reshape(b, s, h, dh)
+    k = (x @ p["wk"]).reshape(b, s, hkv, dh)
+    v = (x @ p["wv"]).reshape(b, s, hkv, dh)
+    if acfg.qk_norm:
+        q = rms_norm_headdim(p["q_norm"], q)
+        k = rms_norm_headdim(p["k_norm"], k)
+    sin, cos = rope_angles(positions, dh, acfg.rope_theta)  # [B?, S, dh/2]
+    sin = sin[..., None, :]  # broadcast over heads: [..., S, 1, dh/2]
+    cos = cos[..., None, :]
+    q = apply_rope(q, sin, cos)
+    k = apply_rope(k, sin, cos)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# Reference attention (small shapes only; used by tests as an oracle)
+# ---------------------------------------------------------------------------
+def reference_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    soft_cap: Optional[float] = None,
+    q_offset: int = 0,
+) -> jax.Array:
+    """Naive O(S^2)-memory attention. q [B,Sq,H,dh], k/v [B,Skv,Hkv,dh] -> [B,Sq,H,dh]."""
+    b, sq, h, dh = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    qg = q.reshape(b, sq, hkv, g, dh)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k,
+                        preferred_element_type=jnp.float32)
+    logits = logits / math.sqrt(dh)
+    if soft_cap is not None:
+        logits = soft_cap * jnp.tanh(logits / soft_cap)
+    qpos = jnp.arange(sq) + q_offset
+    kpos = jnp.arange(skv)
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, sq, h, dh).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Chunked (flash-dataflow) attention for train/prefill
+# ---------------------------------------------------------------------------
+def chunked_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    soft_cap: Optional[float] = None,
+    q_chunk: int = 512,
+    kv_chunk: int = 512,
+    q_offset: int = 0,
+) -> jax.Array:
+    """Online-softmax attention, O(q_chunk*kv_chunk) memory.
+
+    q [B,Sq,H,dh]; k/v [B,Skv,Hkv,dh]. Fully masked (q_block, kv_block) pairs are
+    skipped with lax.cond so causal/windowed compute is ~halved at runtime.
+    """
+    b, sq, h, dh = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    q_chunk = min(q_chunk, sq)
+    kv_chunk = min(kv_chunk, skv)
+    nq, nk = sq // q_chunk, skv // kv_chunk
+    if sq % q_chunk or skv % kv_chunk:
+        raise ValueError(f"seq lens ({sq},{skv}) must divide chunks ({q_chunk},{kv_chunk})")
+    scale = 1.0 / math.sqrt(dh)
+
+    qc = q.reshape(b, nq, q_chunk, hkv, g, dh).transpose(1, 0, 2, 3, 4, 5)  # [nq,B,qc,hkv,g,dh]
+    kc = k.reshape(b, nk, kv_chunk, hkv, dh).transpose(1, 0, 2, 3, 4)       # [nk,B,kc,hkv,dh]
+    vc = v.reshape(b, nk, kv_chunk, hkv, dh).transpose(1, 0, 2, 3, 4)
+
+    def q_step(_, qi_qblk):
+        qi, qblk = qi_qblk
+        q_start = qi * q_chunk + q_offset
+
+        def kv_step(carry, ki_kv):
+            m, l, acc = carry
+            ki, kblk, vblk = ki_kv
+            k_start = ki * kv_chunk
+            # block-level reachability (static dataflow, dynamic skip)
+            reachable = jnp.array(True)
+            if causal:
+                reachable &= k_start <= q_start + q_chunk - 1
+            if window is not None:
+                reachable &= k_start + kv_chunk - 1 > q_start - window
+
+            def compute(carry):
+                m, l, acc = carry
+                s = jnp.einsum(
+                    "bqhgd,bkhd->bhgqk", qblk, kblk,
+                    preferred_element_type=jnp.float32,
+                ) * scale
+                if soft_cap is not None:
+                    s = soft_cap * jnp.tanh(s / soft_cap)
+                qpos = q_start + jnp.arange(q_chunk)
+                kpos = k_start + jnp.arange(kv_chunk)
+                msk = jnp.ones((q_chunk, kv_chunk), bool)
+                if causal:
+                    msk &= kpos[None, :] <= qpos[:, None]
+                if window is not None:
+                    msk &= kpos[None, :] > qpos[:, None] - window
+                s = jnp.where(msk[None, None, None], s, NEG_INF)
+                m_new = jnp.maximum(m, s.max(axis=-1))
+                p = jnp.exp(s - m_new[..., None])
+                corr = jnp.exp(m - m_new)
+                l_new = l * corr + p.sum(axis=-1)
+                acc_new = acc * corr[..., None] + jnp.einsum(
+                    "bhgqk,bkhd->bhgqd", p.astype(vblk.dtype), vblk,
+                    preferred_element_type=jnp.float32,
+                )
+                return m_new, l_new, acc_new
+
+            new_carry = jax.lax.cond(reachable, compute, lambda c: c, (m, l, acc))
+            return new_carry, None
+
+        m0 = jnp.full((b, hkv, g, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, q_chunk), jnp.float32)
+        a0 = jnp.zeros((b, hkv, g, q_chunk, dh), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), (jnp.arange(nk), kc, vc))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]        # [b,hkv,g,qc,dh]
+        out = out.transpose(0, 3, 1, 2, 4)                   # [b,qc,hkv,g,dh]
+        return None, out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(q_step, None, (jnp.arange(nq), qc))  # [nq,b,qc,hkv,g,dh]
+    return outs.transpose(1, 0, 2, 3, 4, 5).reshape(b, sq, h, dh)
+
+
+# ---------------------------------------------------------------------------
+# Block forward paths
+# ---------------------------------------------------------------------------
+def attention_train(
+    p: Params,
+    acfg: AttentionConfig,
+    x: jax.Array,
+    *,
+    q_chunk: int = 512,
+    kv_chunk: int = 512,
+    use_pallas: bool = False,
+) -> jax.Array:
+    """Full-sequence causal attention (training / prefill compute). x [B,S,D]."""
+    b, s, _ = x.shape
+    positions = jnp.arange(s)[None, :]
+    q, k, v = _project_qkv(p, acfg, x, positions)
+    if use_pallas:
+        from repro.kernels import ops as kops
+
+        ctx = kops.flash_attention(
+            q, k, v, causal=True, window=acfg.window, soft_cap=acfg.logit_soft_cap
+        )
+    elif s <= max(q_chunk, 128):
+        ctx = reference_attention(
+            q, k, v, causal=True, window=acfg.window, soft_cap=acfg.logit_soft_cap
+        )
+    else:
+        ctx = chunked_attention(
+            q, k, v,
+            causal=True, window=acfg.window, soft_cap=acfg.logit_soft_cap,
+            q_chunk=q_chunk, kv_chunk=kv_chunk,
+        )
+    return ctx.reshape(b, s, -1) @ p["wo"]
+
+
+def attention_prefill(
+    p: Params,
+    acfg: AttentionConfig,
+    x: jax.Array,
+    cache_len: int,
+    *,
+    q_chunk: int = 512,
+    kv_chunk: int = 512,
+    use_pallas: bool = False,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Prefill: causal attention + emit a fixed-capacity KV cache of ``cache_len``.
+
+    For local attention the cache capacity is min(window, cache_len) (ring buffer).
+    """
+    b, s, _ = x.shape
+    positions = jnp.arange(s)[None, :]
+    q, k, v = _project_qkv(p, acfg, x, positions)
+    if use_pallas:
+        from repro.kernels import ops as kops
+
+        ctx = kops.flash_attention(
+            q, k, v, causal=True, window=acfg.window, soft_cap=acfg.logit_soft_cap
+        )
+    elif s <= max(q_chunk, 128):
+        ctx = reference_attention(
+            q, k, v, causal=True, window=acfg.window, soft_cap=acfg.logit_soft_cap
+        )
+    else:
+        ctx = chunked_attention(
+            q, k, v,
+            causal=True, window=acfg.window, soft_cap=acfg.logit_soft_cap,
+            q_chunk=q_chunk, kv_chunk=kv_chunk,
+        )
+    y = ctx.reshape(b, s, -1) @ p["wo"]
+
+    cap = _cache_capacity(acfg, cache_len)
+    hkv, dh = acfg.num_kv_heads, acfg.head_dim
+    ck = jnp.zeros((b, cap, hkv, dh), k.dtype)
+    cv = jnp.zeros((b, cap, hkv, dh), v.dtype)
+    if acfg.window is not None and s > cap:
+        # keep the last `cap` positions, ring-indexed so slot = pos % cap
+        tail_k, tail_v = k[:, -cap:], v[:, -cap:]
+        start = s - cap
+        slots = (start + jnp.arange(cap)) % cap
+        ck = ck.at[:, slots].set(tail_k)
+        cv = cv.at[:, slots].set(tail_v)
+    else:
+        ck = jax.lax.dynamic_update_slice(ck, k[:, : min(s, cap)], (0, 0, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v[:, : min(s, cap)], (0, 0, 0, 0))
+    cache = {"k": ck, "v": cv}
+    return y, cache
+
+
+def _cache_capacity(acfg: AttentionConfig, cache_len: int) -> int:
+    if acfg.window is not None:
+        return min(acfg.window, cache_len)
+    return cache_len
+
+
+def attention_decode(
+    p: Params,
+    acfg: AttentionConfig,
+    x: jax.Array,
+    cache: Dict[str, jax.Array],
+    cur_len: jax.Array,
+    *,
+    use_pallas: bool = False,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One-token decode. x [B,1,D]; cache k/v [B,cap,Hkv,dh].
+
+    ``cur_len`` = tokens already cached, scalar OR per-row [B] (ragged batches
+    from the continuous-batching scheduler). Static shapes: the new KV is
+    written at slot ``cur_len % cap`` (ring semantics make full and windowed
+    caches uniform); all cap positions are scored with invalid ones masked.
+    """
+    b = x.shape[0]
+    h, hkv, dh = acfg.num_heads, acfg.num_kv_heads, acfg.head_dim
+    g = h // hkv
+    cl = jnp.broadcast_to(jnp.asarray(cur_len, jnp.int32), (b,))        # [B]
+    positions = cl[:, None]
+    q, k_new, v_new = _project_qkv(p, acfg, x, positions)
+
+    cap = cache["k"].shape[1]
+    slot = cl % cap
+    rows = jnp.arange(b)
+    ck = cache["k"].at[rows, slot].set(k_new[:, 0])
+    cv = cache["v"].at[rows, slot].set(v_new[:, 0])
+
+    if use_pallas:
+        from repro.kernels import ops as kops
+
+        ctx = kops.decode_attention(
+            q, ck, cv, cur_len=cl, window=acfg.window,
+            soft_cap=acfg.logit_soft_cap,
+        )
+    else:
+        qg = q.reshape(b, 1, hkv, g, dh)
+        # bf16 operands + f32 accumulation (MXU-native; avoids materializing
+        # f32 copies of the KV cache — §Perf iteration 2)
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, ck,
+                       preferred_element_type=jnp.float32)
+        s = s / math.sqrt(dh)
+        if acfg.logit_soft_cap is not None:
+            s = acfg.logit_soft_cap * jnp.tanh(s / acfg.logit_soft_cap)
+        # slot i holds absolute position: full cache -> i; ring cache -> reconstructed
+        idx = jnp.arange(cap)[None, :]                                  # [1, cap]
+        clb = cl[:, None]
+        if acfg.window is None:
+            kpos = jnp.broadcast_to(idx, (b, cap))
+        else:
+            # ring: slots ahead of the write head hold (older) positions from the
+            # previous lap: pos = lap_base + i where lap_base depends on wrap
+            lap = (clb // cap) * cap
+            kpos = jnp.where(idx <= (clb % cap), lap + idx, lap - cap + idx)
+        valid = (kpos <= clb) & (kpos >= 0)      # >=0: not-yet-written ring slots
+        if acfg.window is not None:
+            valid &= kpos > clb - acfg.window
+        s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
+        probs = jax.nn.softmax(s, axis=-1)
+        ctx = jnp.einsum("bhgqk,bkhd->bqhgd", probs.astype(cv.dtype), cv,
+                         preferred_element_type=jnp.float32)
+        ctx = ctx.reshape(b, 1, h, dh).astype(x.dtype)
+
+    y = ctx.reshape(b, 1, -1) @ p["wo"]
+    return y, {"k": ck, "v": cv}

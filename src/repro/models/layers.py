@@ -1,0 +1,108 @@
+"""Shared layer primitives: norms, RoPE, MLPs, embeddings, init helpers."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+def dense_init(key: jax.Array, shape: Tuple[int, ...], dtype: Any, fan_in: Optional[int] = None) -> jax.Array:
+    """Truncated-normal init scaled by 1/sqrt(fan_in)."""
+    fan = fan_in if fan_in is not None else shape[0]
+    scale = 1.0 / jnp.sqrt(jnp.maximum(fan, 1)).astype(jnp.float32)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key: jax.Array, shape: Tuple[int, ...], dtype: Any) -> jax.Array:
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms (computed in f32, cast back)
+# ---------------------------------------------------------------------------
+def init_norm(kind: str, dim: int, dtype: Any) -> Params:
+    p: Params = {"scale": jnp.ones((dim,), dtype)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((dim,), dtype)
+    return p
+
+
+def apply_norm(kind: str, p: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(var + eps) * p["scale"].astype(jnp.float32)
+    elif kind == "layernorm":
+        mean = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        out = (xf - mean) * jax.lax.rsqrt(var + eps)
+        out = out * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:
+        raise ValueError(f"unknown norm {kind!r}")
+    return out.astype(x.dtype)
+
+
+def rms_norm_headdim(scale: jax.Array, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """qk-norm: RMS-normalize the trailing head_dim."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+def rope_angles(positions: jax.Array, head_dim: int, theta: float) -> Tuple[jax.Array, jax.Array]:
+    """positions [...,] -> (sin, cos) each [..., head_dim//2], f32."""
+    half = head_dim // 2
+    freqs = jnp.exp(-jnp.log(theta) * (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # [..., half]
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def apply_rope(x: jax.Array, sin: jax.Array, cos: jax.Array) -> jax.Array:
+    """x [..., T, heads..., head_dim]; sin/cos broadcastable to [..., T, 1, half]."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out1 = xf1 * cos - xf2 * sin
+    out2 = xf2 * cos + xf1 * sin
+    return jnp.concatenate([out1, out2], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Dense MLPs
+# ---------------------------------------------------------------------------
+def init_mlp(kind: str, key: jax.Array, d_model: int, d_ff: int, dtype: Any) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    if kind == "swiglu":
+        return {
+            "w_gate": dense_init(k1, (d_model, d_ff), dtype),
+            "w_up": dense_init(k2, (d_model, d_ff), dtype),
+            "w_down": dense_init(k3, (d_ff, d_model), dtype, fan_in=d_ff),
+        }
+    if kind == "gelu_mlp":
+        return {
+            "w_up": dense_init(k1, (d_model, d_ff), dtype),
+            "w_down": dense_init(k2, (d_ff, d_model), dtype, fan_in=d_ff),
+        }
+    raise ValueError(f"unknown mlp {kind!r}")
+
+
+def apply_mlp(kind: str, p: Params, x: jax.Array) -> jax.Array:
+    if kind == "swiglu":
+        gate = jax.nn.silu(x @ p["w_gate"])
+        return (gate * (x @ p["w_up"])) @ p["w_down"]
+    if kind == "gelu_mlp":
+        return jax.nn.gelu(x @ p["w_up"]) @ p["w_down"]
+    raise ValueError(f"unknown mlp {kind!r}")
+
+
+def swiglu_ffn(x: jax.Array, w_gate: jax.Array, w_up: jax.Array, w_down: jax.Array) -> jax.Array:
+    return (jax.nn.silu(x @ w_gate) * (x @ w_up)) @ w_down

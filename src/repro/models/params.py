@@ -1,0 +1,104 @@
+"""Parameter and model-FLOP accounting (roofline §: MODEL_FLOPS = 6·N·D).
+
+``count_params`` walks a real params pytree; ``analytic_params`` computes the same
+from the config without allocating (used for full-size archs on the CPU host).
+``active_params`` restricts MoE layers to top-k routed + shared experts, which is
+what enters 6·N_active·D for MoE archs.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import numpy as np
+
+from repro.config.base import ModelConfig
+
+
+def count_params(params: Any) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))
+
+
+def _block_params(cfg: ModelConfig, kind: str, active_only: bool) -> int:
+    d = cfg.d_model
+    n = 0
+    norm = d if cfg.norm == "rmsnorm" else 2 * d
+
+    def mlp_params(d_ff: int) -> int:
+        mats = 3 if cfg.mlp == "swiglu" else 2
+        return mats * d * d_ff
+
+    if kind in ("attn_mlp", "attn_moe", "local_attn"):
+        a = cfg.attention
+        n += 2 * norm
+        n += d * a.num_heads * a.head_dim * 2              # wq, wo
+        n += d * a.num_kv_heads * a.head_dim * 2           # wk, wv
+        if a.qk_norm:
+            n += 2 * a.head_dim
+        if kind == "attn_moe":
+            m = cfg.moe
+            experts = m.top_k if active_only else m.storage_experts
+            mats = 3 if cfg.mlp == "swiglu" else 2
+            n += d * m.num_experts                         # router (always read)
+            n += experts * mats * d * m.expert_d_ff
+            if m.num_shared_experts:
+                sf = m.num_shared_experts * m.shared_d_ff
+                n += 3 * d * sf + d                        # fused shared + gate
+        else:
+            n += mlp_params(cfg.d_ff)
+        return n
+    if kind == "mlstm":
+        d_inner = 2 * d
+        n += norm
+        n += d * 2 * d_inner                               # up
+        n += 3 * d_inner * d_inner                         # q,k,v
+        n += d_inner * 2 * cfg.recurrent.num_heads + 2 * cfg.recurrent.num_heads
+        n += d_inner                                       # skip
+        n += d_inner * d                                   # down
+        return n
+    if kind == "slstm":
+        h = cfg.recurrent.num_heads
+        dh = d // h
+        n += norm
+        n += d * 4 * d + 4 * d                             # w_in + b
+        n += 4 * h * dh * dh                               # recurrent block-diag
+        up = (4 * d) // 3
+        n += d * 2 * up + up * d
+        return n
+    if kind == "rglru":
+        w = cfg.recurrent.lru_width or d
+        n += 2 * norm
+        n += 2 * d * w                                     # branch in-projs
+        n += cfg.recurrent.conv_width * w + w              # conv
+        n += 2 * w * w + w                                 # gates + lambda
+        n += w * d                                         # out
+        n += mlp_params(cfg.d_ff)
+        return n
+    raise ValueError(kind)
+
+
+def analytic_params(cfg: ModelConfig, active_only: bool = False) -> int:
+    n = cfg.vocab_size * cfg.d_model                       # embed
+    if not cfg.tie_embeddings:
+        n += cfg.d_model * cfg.vocab_size                  # lm head
+    if cfg.frontend is not None and cfg.frontend_dim != cfg.d_model:
+        n += cfg.frontend_dim * cfg.d_model
+    n += cfg.d_model if cfg.norm == "rmsnorm" else 2 * cfg.d_model
+    for kind in cfg.layer_kinds:
+        n += _block_params(cfg, kind, active_only)
+    return n
+
+
+def model_flops(cfg: ModelConfig, tokens: int) -> int:
+    """MODEL_FLOPS = 6 · N(_active) · tokens  (fwd+bwd; fwd-only callers divide by 3)."""
+    return 6 * analytic_params(cfg, active_only=cfg.has_moe) * tokens
+
+
+def param_summary(cfg: ModelConfig) -> Dict[str, float]:
+    total = analytic_params(cfg, active_only=False)
+    active = analytic_params(cfg, active_only=True)
+    return {
+        "total_params_B": total / 1e9,
+        "active_params_B": active / 1e9,
+        "bf16_bytes_GB": 2 * total / 2**30,
+    }

@@ -1,0 +1,113 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+Block: x -> [branch a: linear -> causal conv1d(w) -> RG-LRU] * [branch b: linear
+-> gelu] -> linear out. The RG-LRU diagonal linear recurrence
+``h_t = a_t * h_{t-1} + sqrt(1-a_t^2) * (i_t * x_t)`` is evaluated with
+``jax.lax.associative_scan`` for train/prefill (log-depth parallel over sequence)
+and as a single fused step for decode. State is O(1) in sequence length.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import RecurrentConfig
+from repro.models.layers import Params, dense_init
+
+State = Dict[str, jax.Array]
+
+_C = 8.0  # Griffin's fixed recurrence-sharpness constant
+
+
+def init_rglru(key: jax.Array, d_model: int, rcfg: RecurrentConfig, dtype: Any) -> Params:
+    w = rcfg.lru_width or d_model
+    ka, kb, kx, kr, ki, kc, ko = jax.random.split(key, 7)
+    # Lambda init so a = sigmoid(lam)^c spreads over (0.9, 0.999)
+    u = jax.random.uniform(kr, (w,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(u ** (1.0 / _C) / (1.0 - u ** (1.0 / _C)))
+    return {
+        "w_a": dense_init(ka, (d_model, w), dtype),            # branch a in-proj
+        "w_b": dense_init(kb, (d_model, w), dtype),            # branch b (gate) in-proj
+        "conv_w": (jax.random.normal(kc, (rcfg.conv_width, w), jnp.float32) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((w,), dtype),
+        "w_rg": dense_init(kx, (w, w), jnp.float32),           # recurrence gate r_t
+        "w_ig": dense_init(ki, (w, w), jnp.float32),           # input gate i_t
+        "lam": lam,
+        "w_out": dense_init(ko, (w, d_model), dtype, fan_in=w),
+    }
+
+
+def rglru_zero_state(batch: int, d_model: int, rcfg: RecurrentConfig) -> State:
+    w = rcfg.lru_width or d_model
+    return {
+        "h": jnp.zeros((batch, w), jnp.float32),
+        "conv": jnp.zeros((batch, rcfg.conv_width - 1, w), jnp.float32),
+    }
+
+
+def _causal_conv(p: Params, x: jax.Array, conv_state: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """x [B,S,W]; conv_state [B,cw-1,W] holds the previous cw-1 inputs."""
+    cw = p["conv_w"].shape[0]
+    xf = jnp.concatenate([conv_state.astype(x.dtype), x], axis=1)  # [B, S+cw-1, W]
+    out = sum(xf[:, i : i + x.shape[1]] * p["conv_w"][i] for i in range(cw))
+    new_state = xf[:, -(cw - 1) :].astype(jnp.float32)
+    return out + p["conv_b"], new_state
+
+
+def _rglru_gates(p: Params, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """x [...,W] (post-conv) -> (a_t, gated input) in f32."""
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ p["w_rg"])
+    i = jax.nn.sigmoid(xf @ p["w_ig"])
+    log_a = -_C * r * jax.nn.softplus(p["lam"])     # log a_t  (a = sigmoid(lam)^(c*r))
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    return a, beta * (i * xf)
+
+
+def _rglru_inner(p: Params, x: jax.Array, state: State) -> Tuple[jax.Array, State]:
+    """x [B,S,D] -> (y [B,S,D], state)."""
+    b, s, d = x.shape
+    xa = x @ p["w_a"]
+    xb = jax.nn.gelu(x @ p["w_b"])
+    conv_out, conv_state = _causal_conv(p, xa, state["conv"])
+    a, u = _rglru_gates(p, conv_out)                 # [B,S,W] each, f32
+
+    # h_t = a_t h_{t-1} + u_t ; fold the incoming state into u_0
+    u = u.at[:, 0].add(a[:, 0] * state["h"])
+
+    def combine(l, r):
+        al, ul = l
+        ar, ur = r
+        return al * ar, ar * ul + ur
+
+    a_sc, h = jax.lax.associative_scan(combine, (a, u), axis=1)
+    new_state = {"h": h[:, -1], "conv": conv_state}
+    y = (h.astype(x.dtype) * xb) @ p["w_out"]
+    return y, new_state
+
+
+def rglru_train(p: Params, x: jax.Array, rcfg: RecurrentConfig) -> jax.Array:
+    state = rglru_zero_state(x.shape[0], x.shape[-1], rcfg)
+    y, _ = _rglru_inner(p, x, state)
+    return y
+
+
+def rglru_prefill(p: Params, x: jax.Array, rcfg: RecurrentConfig) -> Tuple[jax.Array, State]:
+    state = rglru_zero_state(x.shape[0], x.shape[-1], rcfg)
+    return _rglru_inner(p, x, state)
+
+
+def rglru_decode(p: Params, x: jax.Array, state: State) -> Tuple[jax.Array, State]:
+    """x [B,1,D] single-step recurrence."""
+    b, s, d = x.shape
+    assert s == 1
+    xa = x @ p["w_a"]
+    xb = jax.nn.gelu(x @ p["w_b"])
+    conv_out, conv_state = _causal_conv(p, xa, state["conv"])
+    a, u = _rglru_gates(p, conv_out)
+    h = a[:, 0] * state["h"] + u[:, 0]
+    y = (h[:, None].astype(x.dtype) * xb) @ p["w_out"]
+    return y, {"h": h, "conv": conv_state}

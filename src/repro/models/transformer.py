@@ -1,0 +1,633 @@
+"""Composable decoder: assembles any ModelConfig's segment stack into
+train / prefill / decode entry points.
+
+Layer stack = ``cfg.segments``: each segment is a unit of block kinds scanned
+``reps`` times with parameters stacked on axis 0, so HLO size is independent of
+depth. Decode threads a per-layer state pytree (KV caches / recurrent states)
+through the same scan. The MoE FFN implementation is selected by
+``Runtime.sharding.moe_impl``; decode uses the gathered per-token path which is
+also the compiled half of the rotary-residency technique (slot buffers + LUT).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.config.base import ModelConfig, ShardingConfig
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import rglru as rglru_mod
+from repro.models import xlstm as xlstm_mod
+from repro.models.layers import (
+    Params,
+    apply_mlp,
+    apply_norm,
+    embed_init,
+    init_mlp,
+    init_norm,
+)
+
+Aux = Dict[str, jax.Array]
+
+
+@dataclass(frozen=True)
+class Runtime:
+    """Execution context threaded through the model (sharding + kernel choices)."""
+
+    sharding: ShardingConfig = field(default_factory=ShardingConfig)
+    mesh: Optional[Mesh] = None
+    cache_len: int = 2048
+    q_chunk: int = 512
+    kv_chunk: int = 512
+    loss_chunk: int = 512
+
+    @property
+    def dp_spec(self) -> Tuple[str, ...]:
+        return self.sharding.dp_axes
+
+    def constrain(self, x: jax.Array, spec: P) -> jax.Array:
+        if self.mesh is None:
+            return x
+        mesh, spec = _strip_manual(self.mesh, spec)
+        if spec is None:
+            return x
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def _manual_axes(am) -> set:
+    if am is None or not am.axis_names:
+        return set()
+    from jax.sharding import AxisType
+
+    return {
+        n for n, t in zip(am.axis_names, am.axis_types) if t == AxisType.Manual
+    }
+
+
+def _strip_manual(mesh, spec: P):
+    """Drop mesh axes that are Manual in the current shard_map context from a
+    PartitionSpec (they are already fixed there); returns (mesh_to_use, spec)
+    or (mesh, None) if nothing shardable remains."""
+    am = jax.sharding.get_abstract_mesh()
+    manual = _manual_axes(am)
+    if not manual:
+        return mesh, spec
+    entries = []
+    for entry in spec:
+        if entry is None:
+            entries.append(None)
+        elif isinstance(entry, (tuple, list)):
+            kept = tuple(a for a in entry if a not in manual)
+            entries.append(kept if kept else None)
+        else:
+            entries.append(None if entry in manual else entry)
+    if all(e is None for e in entries):
+        return am, None
+    return am, P(*entries)
+
+
+# ===========================================================================
+# Init
+# ===========================================================================
+def _init_block(key: jax.Array, kind: str, cfg: ModelConfig, dtype: Any) -> Params:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    if kind in ("attn_mlp", "local_attn"):
+        return {
+            "ln1": init_norm(cfg.norm, cfg.d_model, dtype),
+            "attn": attn.init_attention(k1, cfg.d_model, cfg.attention, dtype),
+            "ln2": init_norm(cfg.norm, cfg.d_model, dtype),
+            "mlp": init_mlp(cfg.mlp, k2, cfg.d_model, cfg.d_ff, dtype),
+        }
+    if kind == "attn_moe":
+        return {
+            "ln1": init_norm(cfg.norm, cfg.d_model, dtype),
+            "attn": attn.init_attention(k1, cfg.d_model, cfg.attention, dtype),
+            "ln2": init_norm(cfg.norm, cfg.d_model, dtype),
+            "moe": moe_mod.init_moe(k2, cfg.d_model, cfg.moe, cfg.mlp, dtype),
+        }
+    if kind == "mlstm":
+        return {
+            "ln": init_norm(cfg.norm, cfg.d_model, dtype),
+            "cell": xlstm_mod.init_mlstm(k1, cfg.d_model, cfg.recurrent, dtype),
+        }
+    if kind == "slstm":
+        return {
+            "ln": init_norm(cfg.norm, cfg.d_model, dtype),
+            "cell": xlstm_mod.init_slstm(k1, cfg.d_model, cfg.recurrent, dtype),
+        }
+    if kind == "rglru":
+        return {
+            "ln1": init_norm(cfg.norm, cfg.d_model, dtype),
+            "rec": rglru_mod.init_rglru(k1, cfg.d_model, cfg.recurrent, dtype),
+            "ln2": init_norm(cfg.norm, cfg.d_model, dtype),
+            "mlp": init_mlp(cfg.mlp, k2, cfg.d_model, cfg.d_ff, dtype),
+        }
+    raise ValueError(f"unknown block kind {kind!r}")
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Params:
+    dtype = jnp.dtype(cfg.dtype)
+    keys = jax.random.split(key, len(cfg.segments) + 3)
+    segments: List[Tuple[Params, ...]] = []
+    for si, (unit, reps) in enumerate(cfg.segments):
+        unit_params: List[Params] = []
+        for pi, kind in enumerate(unit):
+            pkeys = jax.random.split(jax.random.fold_in(keys[si], pi), reps)
+            stacked = jax.vmap(lambda k: _init_block(k, kind, cfg, dtype))(pkeys)
+            unit_params.append(stacked)
+        segments.append(tuple(unit_params))
+    p: Params = {
+        "embed": embed_init(keys[-3], (cfg.vocab_size, cfg.d_model), dtype),
+        "segments": tuple(segments),
+        "final_norm": init_norm(cfg.norm, cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = embed_init(keys[-2], (cfg.d_model, cfg.vocab_size), dtype)
+    if cfg.frontend is not None and cfg.frontend_dim != cfg.d_model:
+        p["frontend_proj"] = embed_init(keys[-1], (cfg.frontend_dim, cfg.d_model), dtype)
+    return p
+
+
+# ===========================================================================
+# Per-layer states (decode)
+# ===========================================================================
+def zero_state(cfg: ModelConfig, batch: int, cache_len: int) -> Any:
+    """State pytree mirroring ``segments``: per position, stacked over reps."""
+    segs = []
+    for unit, reps in cfg.segments:
+        unit_states = []
+        for kind in unit:
+            st = _zero_block_state(cfg, kind, batch, cache_len)
+            unit_states.append(jax.tree.map(lambda x: jnp.broadcast_to(x, (reps,) + x.shape), st))
+        segs.append(tuple(unit_states))
+    return tuple(segs)
+
+
+def _zero_block_state(cfg: ModelConfig, kind: str, batch: int, cache_len: int) -> Any:
+    dtype = jnp.dtype(cfg.dtype)
+    if kind in ("attn_mlp", "attn_moe", "local_attn"):
+        a = cfg.attention
+        cap = attn._cache_capacity(a, cache_len)
+        shape = (batch, cap, a.num_kv_heads, a.head_dim)
+        return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+    if kind == "mlstm":
+        return xlstm_mod.mlstm_zero_state(batch, cfg.d_model, cfg.recurrent)
+    if kind == "slstm":
+        return xlstm_mod.slstm_zero_state(batch, cfg.d_model, cfg.recurrent)
+    if kind == "rglru":
+        return rglru_mod.rglru_zero_state(batch, cfg.d_model, cfg.recurrent)
+    raise ValueError(kind)
+
+
+# ===========================================================================
+# Block application
+# ===========================================================================
+def _apply_block(
+    kind: str,
+    p: Params,
+    cfg: ModelConfig,
+    rt: Runtime,
+    x: jax.Array,
+    mode: str,                      # "train" | "prefill" | "decode"
+    state: Any,
+    cur_len: Optional[jax.Array],
+    residency: Optional[Dict[str, jax.Array]],
+) -> Tuple[jax.Array, Any, Aux]:
+    b, s, d = x.shape
+    aux: Aux = {}
+    new_state = state
+    if kind in ("attn_mlp", "attn_moe", "local_attn"):
+        acfg = cfg.attention
+        h = apply_norm(cfg.norm, p["ln1"], x)
+        # §Perf iteration 3b: when head-TP is unavailable (heads don't divide
+        # the model axis) shard the QUERY positions over it instead (SP) —
+        # attention compute /tp with one K/V broadcast, vs 16x replication
+        use_sp = (
+            mode in ("train", "prefill")
+            and rt.mesh is not None
+            and acfg.num_heads % dict(rt.mesh.shape)[rt.sharding.tp_axis] != 0
+            and x.shape[1] % dict(rt.mesh.shape)[rt.sharding.tp_axis] == 0
+            and x.shape[1] >= 2048
+        )
+        if mode == "train":
+            if use_sp:
+                y = _sp_attention(p["attn"], acfg, cfg, rt, h, None)[0]
+            else:
+                y = attn.attention_train(
+                    p["attn"], acfg, h,
+                    q_chunk=rt.q_chunk, kv_chunk=rt.kv_chunk,
+                    use_pallas=rt.sharding.use_pallas,
+                )
+        elif mode == "prefill":
+            if use_sp:
+                y, new_state = _sp_attention(p["attn"], acfg, cfg, rt, h, rt.cache_len)
+            else:
+                y, new_state = attn.attention_prefill(
+                    p["attn"], acfg, h, rt.cache_len,
+                    q_chunk=rt.q_chunk, kv_chunk=rt.kv_chunk,
+                    use_pallas=rt.sharding.use_pallas,
+                )
+        else:
+            y, new_state = attn.attention_decode(
+                p["attn"], acfg, h, state, cur_len,
+                use_pallas=rt.sharding.use_pallas,
+            )
+        x = x + y
+        h = apply_norm(cfg.norm, p["ln2"], x)
+        if kind == "attn_moe":
+            if mode == "decode":
+                slot_buffer = lut = None
+                if residency is not None:
+                    slot_buffer, lut = residency["slots"], residency["lut"]
+                h2d = h.reshape(-1, d)
+                logits = moe_mod.router_logits(p["moe"], h2d)
+                ids, weights, moe_aux = moe_mod.topk_route(logits, cfg.moe)
+                if (residency is None and rt.mesh is not None
+                        and rt.sharding.moe_impl == "epsum"):
+                    # §Perf: EP decode — local experts only + one [T,D] psum,
+                    # instead of all-gathering the expert store per layer
+                    am = jax.sharding.get_abstract_mesh()
+                    mesh_arg = am if (am is not None and am.axis_names) else rt.mesh
+                    manual = _manual_axes(am)
+                    dp_eff = tuple(a for a in rt.dp_spec if a not in manual) or None
+
+                    def epdec_fn(p_moe, x2d, ids_, w_):
+                        return moe_mod.moe_epsum_decode_local(
+                            p_moe, cfg.moe, x2d, ids_, w_,
+                            ep_axis=rt.sharding.tp_axis,
+                        )
+
+                    y2 = jax.shard_map(
+                        epdec_fn,
+                        mesh=mesh_arg,
+                        in_specs=(
+                            _moe_param_specs(p["moe"], rt.sharding.tp_axis),
+                            P(dp_eff, None), P(dp_eff, None), P(dp_eff, None),
+                        ),
+                        out_specs=P(dp_eff, None),
+                        check_vma=False,
+                    )(p["moe"], h2d, ids, weights)
+                    miss = jnp.zeros(ids.shape, bool)
+                else:
+                    y2, miss = moe_mod.moe_apply_routed(
+                        p["moe"], h2d, ids, weights,
+                        slot_buffer=slot_buffer, lut=lut,
+                    )
+                aux["moe_miss"] = miss.sum()
+                # routing telemetry for the rotary engine/predictor ("route_*"
+                # keys are stacked per layer by the scan, not summed)
+                aux["route_ids"] = ids
+                aux["route_weights"] = weights
+                aux["route_miss"] = miss
+                aux["route_h"] = h2d
+                y2 = y2.reshape(b, s, d)
+            else:
+                impl = rt.sharding.moe_impl
+                if impl == "epsum" and rt.mesh is None:
+                    impl = "sorted"
+                if impl == "epsum":
+                    ep_size = rt.mesh.shape[rt.sharding.tp_axis]
+
+                    def epsum_fn(p_moe, x2d):
+                        return moe_mod.moe_epsum_local(
+                            p_moe, cfg.moe, x2d,
+                            ep_axis=rt.sharding.tp_axis, ep_size=ep_size,
+                        )
+
+                    # inside another shard_map (pod-compression) the concrete
+                    # mesh is rejected and manual axes may not be mentioned —
+                    # use the ambient abstract mesh and strip manual axes
+                    am = jax.sharding.get_abstract_mesh()
+                    mesh_arg = am if (am is not None and am.axis_names) else rt.mesh
+                    manual = _manual_axes(am)
+                    dp_eff = tuple(a for a in rt.dp_spec if a not in manual) or None
+                    fn = jax.shard_map(
+                        epsum_fn,
+                        mesh=mesh_arg,
+                        in_specs=(
+                            _moe_param_specs(p["moe"], rt.sharding.tp_axis),
+                            P(dp_eff, None),
+                        ),
+                        out_specs=(P(dp_eff, None), P()),
+                        check_vma=False,
+                    )
+                    y2, moe_aux = fn(p["moe"], h.reshape(-1, d))
+                    y2 = y2.reshape(b, s, d)
+                else:
+                    y2, moe_aux = moe_mod.moe_forward(p["moe"], cfg.moe, h, impl=impl)
+            aux.update({f"moe_{k}": v for k, v in moe_aux.items()})
+        else:
+            y2 = apply_mlp(cfg.mlp, p["mlp"], h)
+        return x + y2, new_state, aux
+    if kind == "mlstm":
+        h = apply_norm(cfg.norm, p["ln"], x)
+        if mode == "train":
+            y = xlstm_mod.mlstm_train(p["cell"], h, cfg.recurrent)
+        elif mode == "prefill":
+            y, new_state = xlstm_mod.mlstm_prefill(p["cell"], h, cfg.recurrent)
+        else:
+            y, new_state = xlstm_mod.mlstm_decode(p["cell"], h, state)
+        return x + y, new_state, aux
+    if kind == "slstm":
+        h = apply_norm(cfg.norm, p["ln"], x)
+        if mode == "train":
+            y = xlstm_mod.slstm_train(p["cell"], h, cfg.recurrent)
+        elif mode == "prefill":
+            y, new_state = xlstm_mod.slstm_prefill(p["cell"], h, cfg.recurrent)
+        else:
+            y, new_state = xlstm_mod.slstm_decode(p["cell"], h, state)
+        return x + y, new_state, aux
+    if kind == "rglru":
+        h = apply_norm(cfg.norm, p["ln1"], x)
+        if mode == "train":
+            y = rglru_mod.rglru_train(p["rec"], h, cfg.recurrent)
+        elif mode == "prefill":
+            y, new_state = rglru_mod.rglru_prefill(p["rec"], h, cfg.recurrent)
+        else:
+            y, new_state = rglru_mod.rglru_decode(p["rec"], h, state)
+        x = x + y
+        h = apply_norm(cfg.norm, p["ln2"], x)
+        return x + apply_mlp(cfg.mlp, p["mlp"], h), new_state, aux
+    raise ValueError(kind)
+
+
+def _sp_attention(
+    p: Params,
+    acfg,
+    cfg: ModelConfig,
+    rt: Runtime,
+    h: jax.Array,                       # [B, S, D] normed input
+    cache_len: Optional[int],           # None -> train (no cache out)
+):
+    """Sequence-parallel attention under shard_map: each model-axis peer runs
+    the flash-dataflow chunked attention for its S/tp query slice against the
+    full K/V (q_offset keeps causal/window masks exact)."""
+    b, s, d = h.shape
+    tp = rt.sharding.tp_axis
+    tp_size = dict(rt.mesh.shape)[tp]
+    q, k, v = attn._project_qkv(p, acfg, h, jnp.arange(s)[None, :])
+    am = jax.sharding.get_abstract_mesh()
+    mesh_arg = am if (am is not None and am.axis_names) else rt.mesh
+    manual = _manual_axes(am)
+    dp_eff = tuple(a for a in rt.dp_spec if a not in manual) or None
+    s_loc = s // tp_size
+
+    def local(qc, kf, vf):
+        off = jax.lax.axis_index(tp) * s_loc
+        return attn.chunked_attention(
+            qc, kf, vf,
+            causal=True, window=acfg.window, soft_cap=acfg.logit_soft_cap,
+            q_chunk=min(rt.q_chunk, s_loc), kv_chunk=rt.kv_chunk, q_offset=off,
+        )
+
+    ctx = jax.shard_map(
+        local,
+        mesh=mesh_arg,
+        in_specs=(
+            P(dp_eff, tp, None, None),
+            P(dp_eff, None, None, None),
+            P(dp_eff, None, None, None),
+        ),
+        out_specs=P(dp_eff, tp, None, None),
+        check_vma=False,
+    )(q, k, v)
+    y = ctx.reshape(b, s, -1) @ p["wo"]
+    if cache_len is None:
+        return y, None
+    cap = attn._cache_capacity(acfg, cache_len)
+    ck = jnp.zeros((b, cap, acfg.num_kv_heads, acfg.head_dim), k.dtype)
+    cv = jnp.zeros((b, cap, acfg.num_kv_heads, acfg.head_dim), v.dtype)
+    if acfg.window is not None and s > cap:
+        start = s - cap
+        slots = (start + jnp.arange(cap)) % cap
+        ck = ck.at[:, slots].set(k[:, -cap:])
+        cv = cv.at[:, slots].set(v[:, -cap:])
+    else:
+        ck = jax.lax.dynamic_update_slice(ck, k[:, : min(s, cap)], (0, 0, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v[:, : min(s, cap)], (0, 0, 0, 0))
+    return y, {"k": ck, "v": cv}
+
+
+def _moe_param_specs(p: Params, tp_axis: str) -> Any:
+    """shard_map in_specs for MoE params: experts sharded on E, rest replicated."""
+    specs = {"router": P(None, None)}
+    specs["experts"] = {k: P(tp_axis, None, None) for k in p["experts"]}
+    if "shared" in p:
+        specs["shared"] = {k: P(None, None) for k in p["shared"]}
+        specs["shared_gate"] = P(None, None)
+    return specs
+
+
+def _remat_policy(name: str):
+    if name == "none":
+        return None
+    if name == "full":
+        return jax.checkpoint_policies.nothing_saveable
+    if name == "dots_saveable":
+        return jax.checkpoint_policies.dots_saveable
+    raise ValueError(f"unknown remat policy {name!r}")
+
+
+# ===========================================================================
+# Stack
+# ===========================================================================
+def _run_stack(
+    cfg: ModelConfig,
+    params: Params,
+    rt: Runtime,
+    x: jax.Array,
+    mode: str,
+    state: Optional[Any],
+    cur_len: Optional[jax.Array],
+    residency: Optional[Any],
+) -> Tuple[jax.Array, Any, Aux]:
+    """Scan the segment stack. residency: per-MoE-layer {slots, lut} stacked over reps."""
+    aux_tot: Dict[str, jax.Array] = {}
+    new_states: List[Any] = []
+    for si, (unit, reps) in enumerate(cfg.segments):
+        unit_params = params["segments"][si]
+        # scan xs must be uniform pytrees: {} stands in for "no state"/"no residency"
+        unit_state = state[si] if state is not None else tuple({} for _ in unit)
+        unit_res = {}
+        if residency is not None and any(k == "attn_moe" for k in unit):
+            unit_res = residency[si]
+
+        def unit_fn(x, per_rep, unit=unit):
+            p_list, s_list, r = per_rep
+            r = r if r else None
+            new_s = []
+            aux_u: Dict[str, jax.Array] = {}
+            for pi, kind in enumerate(unit):
+                st = s_list[pi] if s_list[pi] else None
+                res_i = r if kind == "attn_moe" else None
+                x, ns, aux_b = _apply_block(
+                    kind, p_list[pi], cfg, rt, x, mode, st, cur_len, res_i
+                )
+                new_s.append(ns if ns is not None else {})
+                for k, v in aux_b.items():
+                    if k.startswith("route_"):
+                        aux_u[k] = v            # passed through, stacked by scan
+                    else:
+                        aux_u[k] = aux_u.get(k, jnp.zeros(())) + v
+            return x, (tuple(new_s), aux_u)
+
+        policy = _remat_policy(rt.sharding.remat_policy)
+        if mode == "train" and policy is not None:
+            unit_fn = jax.checkpoint(unit_fn, policy=policy)
+
+        x, (seg_states, seg_aux) = jax.lax.scan(
+            unit_fn, x, (unit_params, unit_state, unit_res)
+        )
+        new_states.append(seg_states)
+        for k, v in seg_aux.items():
+            if k.startswith("route_"):
+                aux_tot[f"{k}/seg{si}"] = v      # [reps, ...] per-layer telemetry
+            else:
+                aux_tot[k] = aux_tot.get(k, 0.0) + v.sum()
+        x = rt.constrain(x, P(rt.dp_spec, None, None))
+    return x, tuple(new_states), aux_tot
+
+
+# ===========================================================================
+# Embedding / head
+# ===========================================================================
+def embed_tokens(cfg: ModelConfig, params: Params, tokens: jax.Array) -> jax.Array:
+    return jnp.take(params["embed"], tokens, axis=0)
+
+
+def _prepend_frontend(
+    cfg: ModelConfig, params: Params, x: jax.Array, frontend: Optional[jax.Array]
+) -> jax.Array:
+    if cfg.frontend is None:
+        return x
+    assert frontend is not None, f"{cfg.name} requires frontend embeddings"
+    fe = frontend.astype(x.dtype)
+    if "frontend_proj" in params:
+        fe = fe @ params["frontend_proj"]
+    return jnp.concatenate([fe, x], axis=1)
+
+
+def lm_logits(cfg: ModelConfig, params: Params, h: jax.Array) -> jax.Array:
+    h = apply_norm(cfg.norm, params["final_norm"], h)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return h @ head
+
+
+# ===========================================================================
+# Entry points
+# ===========================================================================
+def forward_train(
+    cfg: ModelConfig,
+    params: Params,
+    tokens: jax.Array,
+    rt: Runtime,
+    frontend: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Aux]:
+    """tokens [B, S_tok] -> hidden [B, S_total, D] (pre-head), aux losses."""
+    x = embed_tokens(cfg, params, tokens)
+    x = _prepend_frontend(cfg, params, x, frontend)
+    x = rt.constrain(x, P(rt.dp_spec, None, None))
+    h, _, aux = _run_stack(cfg, params, rt, x, "train", None, None, None)
+    return h, aux
+
+
+def lm_loss(
+    cfg: ModelConfig,
+    params: Params,
+    tokens: jax.Array,
+    labels: jax.Array,
+    rt: Runtime,
+    frontend: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Aux]:
+    """Next-token cross-entropy, chunked over sequence so [B,S,V] never
+    materializes (matters at vocab 256k). labels [B, S_tok] with -1 = ignore."""
+    h, aux = forward_train(cfg, params, tokens, rt, frontend)
+    f = cfg.frontend_len if cfg.frontend is not None else 0
+    if f > 0:
+        pred_h = h[:, f - 1 : -1]            # predicts every token position
+        tgt = labels
+    else:
+        pred_h = h[:, :-1]
+        tgt = labels[:, 1:]
+    b, s, d = pred_h.shape
+    chunk = min(rt.loss_chunk, s)
+    n = s // chunk
+    rem = s - n * chunk
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    hn = apply_norm(cfg.norm, params["final_norm"], pred_h)
+
+    def chunk_loss(hc, tc):
+        logits = (hc @ head).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, jnp.maximum(tc, 0)[..., None], axis=-1)[..., 0]
+        valid = (tc >= 0).astype(jnp.float32)
+        return ((logz - gold) * valid).sum(), valid.sum()
+
+    def body(carry, xs):
+        hc, tc = xs
+        l, c = chunk_loss(hc, tc)
+        return (carry[0] + l, carry[1] + c), None
+
+    hc = hn[:, : n * chunk].reshape(b, n, chunk, d).transpose(1, 0, 2, 3)
+    tc = tgt[:, : n * chunk].reshape(b, n, chunk).transpose(1, 0, 2)
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.zeros(()), jnp.zeros(())), (hc, tc))
+    if rem:
+        l, c = chunk_loss(hn[:, n * chunk :], tgt[:, n * chunk :])
+        tot, cnt = tot + l, cnt + c
+    loss = tot / jnp.maximum(cnt, 1.0)
+    if cfg.has_moe:
+        m = cfg.moe
+        loss = loss + m.router_aux_coef * aux.get("moe_load_balance", 0.0) / max(
+            cfg.num_layers, 1
+        )
+        loss = loss + m.router_z_coef * aux.get("moe_router_z", 0.0) / max(cfg.num_layers, 1)
+    aux["lm_loss"] = loss
+    return loss, aux
+
+
+def prefill_model(
+    cfg: ModelConfig,
+    params: Params,
+    tokens: jax.Array,
+    rt: Runtime,
+    frontend: Optional[jax.Array] = None,
+    last_index: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Any]:
+    """Returns (last-position logits [B, V], decode state).
+
+    ``last_index`` [B] selects each row's true last position (right-padded
+    ragged prefill from the serving engine); default = final position.
+    """
+    x = embed_tokens(cfg, params, tokens)
+    x = _prepend_frontend(cfg, params, x, frontend)
+    x = rt.constrain(x, P(rt.dp_spec, None, None))
+    state = zero_state(cfg, x.shape[0], rt.cache_len)
+    h, state, _ = _run_stack(cfg, params, rt, x, "prefill", state, None, None)
+    if last_index is None:
+        hb = h[:, -1]
+    else:
+        hb = h[jnp.arange(h.shape[0]), last_index]
+    logits = lm_logits(cfg, params, hb[:, None])[:, 0]
+    return logits, state
+
+
+def decode_model(
+    cfg: ModelConfig,
+    params: Params,
+    token: jax.Array,            # [B] int32 current token
+    state: Any,
+    cur_len: jax.Array,          # scalar int32: number of tokens already in cache
+    rt: Runtime,
+    residency: Optional[Any] = None,
+) -> Tuple[jax.Array, Any, Aux]:
+    """One decode step: returns (logits [B, V], new state, aux incl. miss counts)."""
+    x = embed_tokens(cfg, params, token[:, None])
+    x = rt.constrain(x, P(rt.dp_spec, None, None))
+    h, state, aux = _run_stack(cfg, params, rt, x, "decode", state, cur_len, residency)
+    logits = lm_logits(cfg, params, h[:, -1:])[:, 0]
+    return logits, state, aux

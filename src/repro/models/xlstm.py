@@ -1,0 +1,221 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory) [arXiv:2405.04517].
+
+Both use exponential gating with the max-stabilizer trick. Training/prefill run a
+`lax.scan` over time (compact HLO — one fused loop body regardless of seq_len);
+decode is the identical single-step recurrence, so train/decode consistency is a
+property test. States are O(1) in sequence length — these archs carry the
+``long_500k`` cell.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import RecurrentConfig
+from repro.models.layers import Params, dense_init
+
+State = Dict[str, jax.Array]
+
+
+# ===========================================================================
+# mLSTM
+# ===========================================================================
+def init_mlstm(key: jax.Array, d_model: int, rcfg: RecurrentConfig, dtype: Any) -> Params:
+    h = rcfg.num_heads
+    d_inner = 2 * d_model
+    ku, kq, kk, kv, ki, kf, ko, kd, kskip = jax.random.split(key, 9)
+    return {
+        "w_up": dense_init(ku, (d_model, 2 * d_inner), dtype),       # cell branch | gate branch
+        "w_q": dense_init(kq, (d_inner, d_inner), dtype),
+        "w_k": dense_init(kk, (d_inner, d_inner), dtype),
+        "w_v": dense_init(kv, (d_inner, d_inner), dtype),
+        "w_if": dense_init(ki, (d_inner, 2 * h), jnp.float32),       # i,f pre-activations
+        "b_if": jnp.concatenate([jnp.zeros((h,)), jnp.ones((h,)) * 3.0]).astype(jnp.float32),
+        "skip": jnp.ones((d_inner,), dtype),
+        "w_down": dense_init(kd, (d_inner, d_model), dtype, fan_in=d_inner),
+    }
+
+
+def mlstm_zero_state(batch: int, d_model: int, rcfg: RecurrentConfig) -> State:
+    h = rcfg.num_heads
+    dh = (2 * d_model) // h
+    return {
+        "c": jnp.zeros((batch, h, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, h, dh), jnp.float32),
+        "m": jnp.full((batch, h), -1e30, jnp.float32),
+    }
+
+
+def _mlstm_cell(
+    state: State, q: jax.Array, k: jax.Array, v: jax.Array, i_pre: jax.Array, f_pre: jax.Array
+) -> Tuple[State, jax.Array]:
+    """One step. q/k/v [B,H,dh] f32; i/f pre-activations [B,H]. Returns h [B,H,dh]."""
+    dh = q.shape[-1]
+    log_f = -jax.nn.softplus(-f_pre)                      # log sigmoid(f)
+    m_new = jnp.maximum(log_f + state["m"], i_pre)
+    i_g = jnp.exp(i_pre - m_new)
+    f_g = jnp.exp(log_f + state["m"] - m_new)
+    k_scaled = k / jnp.sqrt(dh)
+    c = f_g[..., None, None] * state["c"] + i_g[..., None, None] * (
+        v[..., :, None] * k_scaled[..., None, :]
+    )
+    n = f_g[..., None] * state["n"] + i_g[..., None] * k_scaled
+    num = jnp.einsum("bhvk,bhk->bhv", c, q)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, q)), 1.0)
+    h_out = num / den[..., None]
+    return {"c": c, "n": n, "m": m_new}, h_out
+
+
+def _mlstm_inner(p: Params, x: jax.Array, state: State) -> Tuple[jax.Array, State]:
+    """x [B,S,D] -> (y [B,S,D], state). scan over S."""
+    b, s, d = x.shape
+    up = x @ p["w_up"]
+    cell_in, gate_in = jnp.split(up, 2, axis=-1)          # [B,S,2D] each
+    d_inner = cell_in.shape[-1]
+    hh = p["b_if"].shape[0] // 2
+    dh = d_inner // hh
+    q = (cell_in @ p["w_q"]).reshape(b, s, hh, dh).astype(jnp.float32)
+    k = (cell_in @ p["w_k"]).reshape(b, s, hh, dh).astype(jnp.float32)
+    v = (cell_in @ p["w_v"]).reshape(b, s, hh, dh).astype(jnp.float32)
+    if_pre = cell_in.astype(jnp.float32) @ p["w_if"] + p["b_if"]   # [B,S,2H]
+    i_pre, f_pre = jnp.split(if_pre, 2, axis=-1)
+
+    def step(st, inp):
+        qt, kt, vt, it, ft = inp
+        st, h_out = _mlstm_cell(st, qt, kt, vt, it, ft)
+        return st, h_out
+
+    xs = (
+        q.transpose(1, 0, 2, 3), k.transpose(1, 0, 2, 3), v.transpose(1, 0, 2, 3),
+        i_pre.transpose(1, 0, 2), f_pre.transpose(1, 0, 2),
+    )
+    state, hs = jax.lax.scan(step, state, xs)              # hs [S,B,H,dh]
+    h_seq = hs.transpose(1, 0, 2, 3).reshape(b, s, d_inner).astype(x.dtype)
+    h_seq = h_seq + p["skip"] * cell_in
+    y = (h_seq * jax.nn.silu(gate_in)) @ p["w_down"]
+    return y, state
+
+
+def mlstm_train(p: Params, x: jax.Array, rcfg: RecurrentConfig) -> jax.Array:
+    state = mlstm_zero_state(x.shape[0], x.shape[-1], rcfg)
+    y, _ = _mlstm_inner(p, x, state)
+    return y
+
+
+def mlstm_prefill(p: Params, x: jax.Array, rcfg: RecurrentConfig) -> Tuple[jax.Array, State]:
+    state = mlstm_zero_state(x.shape[0], x.shape[-1], rcfg)
+    return _mlstm_inner(p, x, state)
+
+
+def mlstm_decode(p: Params, x: jax.Array, state: State) -> Tuple[jax.Array, State]:
+    """x [B,1,D]."""
+    return _mlstm_inner_step(p, x, state)
+
+
+def _mlstm_inner_step(p: Params, x: jax.Array, state: State) -> Tuple[jax.Array, State]:
+    b, s, d = x.shape
+    assert s == 1
+    up = x @ p["w_up"]
+    cell_in, gate_in = jnp.split(up, 2, axis=-1)
+    d_inner = cell_in.shape[-1]
+    hh = p["b_if"].shape[0] // 2
+    dh = d_inner // hh
+    sq = cell_in[:, 0]
+    q = (sq @ p["w_q"]).reshape(b, hh, dh).astype(jnp.float32)
+    k = (sq @ p["w_k"]).reshape(b, hh, dh).astype(jnp.float32)
+    v = (sq @ p["w_v"]).reshape(b, hh, dh).astype(jnp.float32)
+    if_pre = sq.astype(jnp.float32) @ p["w_if"] + p["b_if"]
+    i_pre, f_pre = jnp.split(if_pre, 2, axis=-1)
+    state, h_out = _mlstm_cell(state, q, k, v, i_pre, f_pre)
+    h_seq = h_out.reshape(b, 1, d_inner).astype(x.dtype) + p["skip"] * cell_in
+    y = (h_seq * jax.nn.silu(gate_in)) @ p["w_down"]
+    return y, state
+
+
+# ===========================================================================
+# sLSTM
+# ===========================================================================
+def init_slstm(key: jax.Array, d_model: int, rcfg: RecurrentConfig, dtype: Any) -> Params:
+    h = rcfg.num_heads
+    dh = d_model // h
+    kz, ki, kf, ko, kr, kd, ku = jax.random.split(key, 7)
+    return {
+        # input projections for z,i,f,o fused: [D, 4D]
+        "w_in": dense_init(kz, (d_model, 4 * d_model), jnp.float32),
+        # block-diagonal recurrent weights per head: [4, H, dh, dh]
+        "r": (jax.random.normal(kr, (4, h, dh, dh), jnp.float32) / jnp.sqrt(dh)),
+        "b": jnp.concatenate(
+            [jnp.zeros((2 * d_model,)), jnp.ones((d_model,)) * 3.0, jnp.zeros((d_model,))]
+        ).astype(jnp.float32),
+        # post-cell gated MLP (proj factor 4/3, GLU)
+        "w_up": dense_init(ku, (d_model, 2 * ((4 * d_model) // 3)), dtype),
+        "w_down": dense_init(kd, ((4 * d_model) // 3, d_model), dtype, fan_in=(4 * d_model) // 3),
+    }
+
+
+def slstm_zero_state(batch: int, d_model: int, rcfg: RecurrentConfig) -> State:
+    h = rcfg.num_heads
+    dh = d_model // h
+    z = jnp.zeros((batch, h, dh), jnp.float32)
+    return {"c": z, "n": z, "h": z, "m": jnp.full((batch, h, dh), -1e30, jnp.float32)}
+
+
+def _slstm_cell(p: Params, state: State, x_t: jax.Array) -> Tuple[State, jax.Array]:
+    """x_t [B,D] f32 -> h [B,D]."""
+    b, d = x_t.shape
+    _, h, dh, _ = p["r"].shape
+    pre = x_t @ p["w_in"] + p["b"]                          # [B,4D]
+    pre = pre.reshape(b, 4, h, dh)
+    rec = jnp.einsum("bhd,ghde->bghe", state["h"], p["r"])   # [B,4,H,dh]
+    z_pre, i_pre, f_pre, o_pre = jnp.moveaxis(pre + rec, 1, 0)
+    z = jnp.tanh(z_pre)
+    o = jax.nn.sigmoid(o_pre)
+    log_f = -jax.nn.softplus(-f_pre)
+    m_new = jnp.maximum(log_f + state["m"], i_pre)
+    i_g = jnp.exp(i_pre - m_new)
+    f_g = jnp.exp(log_f + state["m"] - m_new)
+    c = f_g * state["c"] + i_g * z
+    n = f_g * state["n"] + i_g
+    h_new = o * c / jnp.maximum(n, 1.0)
+    new_state = {"c": c, "n": n, "h": h_new, "m": m_new}
+    return new_state, h_new.reshape(b, d)
+
+
+def _slstm_inner(p: Params, x: jax.Array, state: State) -> Tuple[jax.Array, State]:
+    b, s, d = x.shape
+    xf = x.astype(jnp.float32)
+
+    def step(st, x_t):
+        st, h_out = _slstm_cell(p, st, x_t)
+        return st, h_out
+
+    state, hs = jax.lax.scan(step, state, xf.transpose(1, 0, 2))  # [S,B,D]
+    h_seq = hs.transpose(1, 0, 2).astype(x.dtype)
+    up = h_seq @ p["w_up"]
+    a, g = jnp.split(up, 2, axis=-1)
+    y = (a * jax.nn.gelu(g)) @ p["w_down"]
+    return y, state
+
+
+def slstm_train(p: Params, x: jax.Array, rcfg: RecurrentConfig) -> jax.Array:
+    state = slstm_zero_state(x.shape[0], x.shape[-1], rcfg)
+    y, _ = _slstm_inner(p, x, state)
+    return y
+
+
+def slstm_prefill(p: Params, x: jax.Array, rcfg: RecurrentConfig) -> Tuple[jax.Array, State]:
+    state = slstm_zero_state(x.shape[0], x.shape[-1], rcfg)
+    return _slstm_inner(p, x, state)
+
+
+def slstm_decode(p: Params, x: jax.Array, state: State) -> Tuple[jax.Array, State]:
+    b, s, d = x.shape
+    assert s == 1
+    state, h_out = _slstm_cell(p, state, x[:, 0].astype(jnp.float32))
+    h_seq = h_out.reshape(b, 1, d).astype(x.dtype)
+    up = h_seq @ p["w_up"]
+    a, g = jnp.split(up, 2, axis=-1)
+    y = (a * jax.nn.gelu(g)) @ p["w_down"]
+    return y, state

@@ -1,0 +1,3 @@
+from repro.serving.engine import ServingEngine  # noqa: F401
+from repro.serving.sampler import Sampler, SamplerConfig  # noqa: F401
+from repro.serving.scheduler import Request, Scheduler  # noqa: F401

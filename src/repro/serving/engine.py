@@ -1,0 +1,212 @@
+"""Continuous-batching serving engine over the compiled whole-model step.
+
+A fixed decode batch of ``num_slots`` rows runs one compiled ``decode_model``
+step per tick; rows are claimed/freed by the scheduler as requests arrive and
+finish (per-row ``lengths`` make the ragged batch exact). New requests are
+prefilled as batch-1 at the next power-of-two length bucket and their KV rows
+spliced into the live state.
+
+Rotary residency in this path rotates slots BETWEEN steps from the previous
+step's routing telemetry (route_* aux): the compiled step computes resident
+experts via slot LUT; missed experts are dropped in-step, counted, and the
+rotation corrects residency for the following step. The per-layer exact path
+(host-corrected misses) lives in ``repro.core.engine`` — this engine is the
+throughput-oriented compiled half.
+"""
+from __future__ import annotations
+
+import math
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config.base import ModelConfig, ResidencyConfig
+from repro.core.predictor import DemandPredictor
+from repro.core.residency import RotaryResidencyManager
+from repro.core.stats import EngineStats
+from repro.models import transformer as tfm
+from repro.models.transformer import Runtime
+from repro.serving.sampler import Sampler, SamplerConfig
+from repro.serving.scheduler import Request, Scheduler
+
+
+class ServingEngine:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params: Any,
+        *,
+        rt: Optional[Runtime] = None,
+        num_slots: int = 4,
+        residency: Optional[ResidencyConfig] = None,
+        sampler: Optional[SamplerConfig] = None,
+        eos: Optional[int] = None,
+    ):
+        self.cfg = cfg
+        self.params = params
+        self.rt = rt or Runtime(cache_len=1024)
+        self.batch = num_slots
+        self.eos = eos
+        self.scheduler = Scheduler(num_slots)
+        self.sampler = Sampler(sampler or SamplerConfig())
+        self.stats = EngineStats()
+
+        self.state = tfm.zero_state(cfg, self.batch, self.rt.cache_len)
+        self.lengths = np.zeros((self.batch,), np.int32)
+        self.next_token = np.zeros((self.batch,), np.int32)
+        self.active = np.zeros((self.batch,), bool)
+
+        # --- residency (MoE archs only) --------------------------------
+        self.res_mgr: Optional[RotaryResidencyManager] = None
+        self.predictor: Optional[DemandPredictor] = None
+        if residency is not None and residency.mode != "full" and cfg.has_moe:
+            host_experts, routers = [], []
+            for si, (unit, reps) in enumerate(cfg.segments):
+                for r in range(reps):
+                    for pi, kind in enumerate(unit):
+                        if kind != "attn_moe":
+                            continue
+                        p_l = jax.tree.map(
+                            lambda a, r=r: a[r], params["segments"][si][pi]
+                        )
+                        host_experts.append(
+                            {n: np.asarray(w, np.float32)
+                             for n, w in p_l["moe"]["experts"].items()}
+                        )
+                        routers.append(np.asarray(p_l["moe"]["router"], np.float32))
+            self.res_mgr = RotaryResidencyManager(
+                cfg, residency, host_experts,
+                batch=self.batch, cache_len=self.rt.cache_len, stats=self.stats,
+            )
+            self.predictor = DemandPredictor(routers, ema=residency.predictor_ema)
+            for li in range(len(host_experts)):
+                self.res_mgr.prepare_layer(li, self.predictor.smoothed[li])
+
+        # --- compiled steps ---------------------------------------------
+        res_arg = self.res_mgr.stacked_residency() if self.res_mgr else None
+
+        def decode_step(params, token, state, lengths, residency):
+            return tfm.decode_model(
+                cfg, params, token, state, lengths, self.rt, residency=residency
+            )
+
+        self._decode = jax.jit(decode_step)
+        self._res_example = res_arg
+        self._prefill_cache: Dict[int, Any] = {}
+
+    # ------------------------------------------------------------------
+    def _prefill_one(self, prompt: np.ndarray) -> Any:
+        """Batch-1 prefill at a power-of-two length bucket (right-padded;
+        decode masks cache positions >= true length so pads never score).
+        Recurrent archs use exact lengths — pads would pollute the state."""
+        s = len(prompt)
+        has_recurrence = any(
+            k in ("mlstm", "slstm", "rglru") for k in self.cfg.layer_kinds
+        )
+        bucket = s if has_recurrence else min(
+            max(16, 1 << (s - 1).bit_length()), self.rt.cache_len
+        )
+        if bucket not in self._prefill_cache:
+            def fn(params, tokens, last):
+                return tfm.prefill_model(
+                    self.cfg, params, tokens, self.rt, last_index=last
+                )
+
+            self._prefill_cache[bucket] = jax.jit(fn)
+        padded = np.zeros((1, bucket), np.int32)
+        padded[0, :s] = prompt
+        logits, state = self._prefill_cache[bucket](
+            self.params, jnp.asarray(padded), jnp.asarray([s - 1], jnp.int32)
+        )
+        return logits, state, s
+
+    def _splice_row(self, slot: int, row_state: Any) -> None:
+        """Insert a batch-1 prefill state into batch row ``slot``."""
+        def splice(dst, src):
+            return dst.at[:, slot].set(src[:, 0])
+
+        self.state = jax.tree.map(splice, self.state, row_state)
+
+    # ------------------------------------------------------------------
+    def submit(self, prompt: np.ndarray, max_new: int,
+               deadline_s: Optional[float] = None) -> Request:
+        return self.scheduler.submit(prompt, max_new, time.perf_counter(), deadline_s)
+
+    def run(self, max_ticks: int = 10_000) -> List[Request]:
+        """Drive until all submitted work completes. Returns completed requests."""
+        ticks = 0
+        t0 = time.perf_counter()
+        while not self.scheduler.idle and ticks < max_ticks:
+            now = time.perf_counter()
+            for req in self.scheduler.admit(now):
+                logits, row_state, true_len = self._prefill_one(req.prompt)
+                self._splice_row(req.slot, row_state)
+                self.lengths[req.slot] = true_len
+                tok = int(self.sampler(np.asarray(logits))[0])
+                self.next_token[req.slot] = tok
+                self.active[req.slot] = True
+                self.stats.tokens += len(req.prompt)
+                # first sampled token may already finish the request
+                self.scheduler.step_done(req.slot, tok, now, self.eos)
+                if req.done:
+                    self.active[req.slot] = False
+            if not self.scheduler.running:
+                ticks += 1
+                continue
+            residency = None
+            if self.res_mgr is not None:
+                residency = self.res_mgr.stacked_residency()
+            logits, self.state, aux = self._decode(
+                self.params,
+                jnp.asarray(self.next_token),
+                self.state,
+                jnp.asarray(self.lengths),
+                residency,
+            )
+            logits_np = np.asarray(logits)
+            self.lengths += self.active
+            toks = self.sampler(logits_np)
+            now = time.perf_counter()
+            for slot in list(self.scheduler.running.keys()):
+                self.next_token[slot] = toks[slot]
+                self.scheduler.step_done(slot, toks[slot], now, self.eos)
+                if slot in self.scheduler.free_slots:
+                    self.active[slot] = False
+            self.stats.steps += 1
+            self.stats.tokens += int(self.active.sum())
+            if self.res_mgr is not None:
+                self._rotate_from_aux(aux)
+            ticks += 1
+        self.stats.wall_s += time.perf_counter() - t0
+        if self.stats.wall_s > 0 and self.stats.steps:
+            self.scheduler.observe_rate(self.stats.steps / self.stats.wall_s)
+        return self.scheduler.completed
+
+    # ------------------------------------------------------------------
+    def _rotate_from_aux(self, aux: Dict[str, jax.Array]) -> None:
+        """Between-step rotation from routing telemetry (compiled path)."""
+        li = 0
+        for si, (unit, reps) in enumerate(self.cfg.segments):
+            if not any(k == "attn_moe" for k in unit):
+                continue
+            ids = np.asarray(aux[f"route_ids/seg{si}"])          # [reps, T, k]
+            w = np.asarray(aux[f"route_weights/seg{si}"])
+            miss = np.asarray(aux[f"route_miss/seg{si}"])
+            h = np.asarray(aux[f"route_h/seg{si}"])              # [reps, T, D]
+            for r in range(reps):
+                layer = li + r
+                self.predictor.observe(layer, ids[r], w[r])
+                # classify against the *current* lut for stats
+                lut = self.res_mgr.policies[layer].lut
+                self.res_mgr.policies[layer].touch(np.unique(ids[r]))
+                ls = self.stats.layer(layer)
+                m = miss[r]
+                ls.hits += int((~m).sum())
+                ls.misses += int(m.sum())
+                nxt = (layer + 1) % len(self.res_mgr.policies)
+                demand = self.predictor.predict(nxt, h[r])
+                self.res_mgr.prepare_layer(nxt, demand)
+            li += reps

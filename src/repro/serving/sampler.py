@@ -1,0 +1,46 @@
+"""Token samplers: greedy / temperature / top-k / top-p, pure numpy (host-side
+sampling keeps the compiled step deterministic and donation-friendly)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class SamplerConfig:
+    temperature: float = 0.0        # 0 = greedy
+    top_k: int = 0                  # 0 = off
+    top_p: float = 1.0
+    seed: int = 0
+
+
+class Sampler:
+    def __init__(self, cfg: SamplerConfig):
+        self.cfg = cfg
+        self.rng = np.random.default_rng(cfg.seed)
+
+    def __call__(self, logits: np.ndarray) -> np.ndarray:
+        """logits [B, V] -> tokens [B]."""
+        c = self.cfg
+        if c.temperature <= 0.0:
+            return np.argmax(logits, axis=-1).astype(np.int32)
+        x = logits.astype(np.float64) / c.temperature
+        if c.top_k > 0:
+            kth = np.partition(x, -c.top_k, axis=-1)[:, -c.top_k][:, None]
+            x = np.where(x < kth, -np.inf, x)
+        p = np.exp(x - x.max(axis=-1, keepdims=True))
+        p /= p.sum(axis=-1, keepdims=True)
+        if c.top_p < 1.0:
+            order = np.argsort(-p, axis=-1)
+            sorted_p = np.take_along_axis(p, order, axis=-1)
+            cum = np.cumsum(sorted_p, axis=-1)
+            keep_sorted = cum - sorted_p < c.top_p
+            keep = np.zeros_like(p, bool)
+            np.put_along_axis(keep, order, keep_sorted, axis=-1)
+            p = np.where(keep, p, 0.0)
+            p /= p.sum(axis=-1, keepdims=True)
+        return np.array(
+            [self.rng.choice(p.shape[-1], p=row) for row in p], np.int32
+        )

@@ -1,0 +1,89 @@
+"""Request scheduler: admission, continuous-batching slot assignment, deadlines.
+
+Straggler mitigation (serving-side): every admission estimates completion time
+from the engine's observed per-token latency; requests that cannot meet their
+deadline are rejected up-front (or, if already running and past deadline,
+truncated at the next step boundary) instead of dragging the whole batch — a
+slow request in a synchronous decode batch is the serving analog of a straggler
+node.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+
+@dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray                 # [S] int32
+    max_new: int
+    deadline_s: Optional[float] = None # relative to submission
+    submitted_at: float = 0.0
+    # filled by the engine
+    output: List[int] = field(default_factory=list)
+    slot: int = -1
+    done: bool = False
+    truncated: bool = False
+    finished_at: float = 0.0
+
+
+class Scheduler:
+    def __init__(self, num_slots: int, *, est_tok_s: float = 20.0):
+        self.num_slots = num_slots
+        self.queue: List = []
+        self.running: Dict[int, Request] = {}       # slot -> request
+        self.free_slots = list(range(num_slots))
+        self.est_tok_s = est_tok_s
+        self.rejected: List[Request] = []
+        self.completed: List[Request] = []
+        self._uid = itertools.count()
+
+    def submit(self, prompt: np.ndarray, max_new: int, now: float,
+               deadline_s: Optional[float] = None) -> Request:
+        req = Request(next(self._uid), np.asarray(prompt, np.int32), max_new,
+                      deadline_s, submitted_at=now)
+        est = (len(prompt) / (4 * self.est_tok_s)) + max_new / self.est_tok_s
+        if deadline_s is not None and est > deadline_s:
+            req.done = True
+            req.truncated = True
+            self.rejected.append(req)
+            return req
+        heapq.heappush(self.queue, (req.deadline_s or float("inf"), req.uid, req))
+        return req
+
+    def admit(self, now: float) -> List[Request]:
+        """Fill free slots from the queue (earliest deadline first)."""
+        admitted = []
+        while self.free_slots and self.queue:
+            _, _, req = heapq.heappop(self.queue)
+            req.slot = self.free_slots.pop(0)
+            self.running[req.slot] = req
+            admitted.append(req)
+        return admitted
+
+    def step_done(self, slot: int, token: int, now: float, eos: Optional[int] = None) -> None:
+        req = self.running[slot]
+        req.output.append(int(token))
+        over_deadline = (
+            req.deadline_s is not None and now - req.submitted_at > req.deadline_s
+        )
+        if len(req.output) >= req.max_new or (eos is not None and token == eos) or over_deadline:
+            req.done = True
+            req.truncated = over_deadline and len(req.output) < req.max_new
+            req.finished_at = now
+            self.completed.append(req)
+            del self.running[slot]
+            self.free_slots.append(slot)
+            self.free_slots.sort()
+
+    def observe_rate(self, tok_s: float) -> None:
+        self.est_tok_s = 0.9 * self.est_tok_s + 0.1 * tok_s
+
+    @property
+    def idle(self) -> bool:
+        return not self.running and not self.queue

@@ -1,0 +1,2 @@
+from repro.training.optimizer import adamw_init, adamw_update, lr_at  # noqa: F401
+from repro.training.trainer import init_train_state, make_train_step, train_loop  # noqa: F401

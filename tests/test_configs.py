@@ -1,0 +1,75 @@
+"""Config registry + assigned-architecture parameter budgets."""
+import pytest
+
+from repro.config import get_config, list_archs
+from repro.configs import ALL_ARCHS, ASSIGNED_ARCHS, reduce_for_smoke
+from repro.configs.shapes import SHAPES, applicable_shapes, shape_applies
+from repro.models.params import analytic_params, param_summary
+
+
+def test_registry_complete():
+    archs = list_archs()
+    for a in ALL_ARCHS:
+        assert a in archs
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_config_valid(arch):
+    cfg = get_config(arch)
+    assert cfg.num_layers > 0
+    assert cfg.d_model > 0
+    smoke = reduce_for_smoke(cfg)
+    assert smoke.num_layers <= cfg.num_layers
+    assert smoke.family == cfg.family
+    # GQA class preserved
+    if cfg.attention is not None:
+        full_mha = cfg.attention.num_kv_heads == cfg.attention.num_heads
+        smoke_mha = smoke.attention.num_kv_heads == smoke.attention.num_heads
+        assert full_mha == smoke_mha
+
+
+# Expected total parameter budgets (B), generous tolerance: configs are from
+# public literature and our analytic count includes everything (embeddings...)
+_EXPECTED_B = {
+    "starcoder2-7b": (6.0, 8.5),
+    "starcoder2-3b": (2.5, 3.6),
+    "qwen3-4b": (3.2, 4.8),
+    "phi3-mini-3.8b": (3.2, 4.4),
+    "qwen2-moe-a2.7b": (12.0, 16.0),     # total (A2.7B = active)
+    "dbrx-132b": (115.0, 140.0),
+    "xlstm-350m": (0.25, 0.50),
+    "recurrentgemma-2b": (2.2, 3.4),
+    "pixtral-12b": (11.0, 13.5),
+    "musicgen-large": (1.8, 2.8),
+}
+
+
+@pytest.mark.parametrize("arch", sorted(_EXPECTED_B))
+def test_param_budget(arch):
+    lo, hi = _EXPECTED_B[arch]
+    n = analytic_params(get_config(arch)) / 1e9
+    assert lo <= n <= hi, f"{arch}: {n:.2f}B outside [{lo},{hi}]"
+
+
+def test_moe_active_params():
+    cfg = get_config("qwen2-moe-a2.7b")
+    s = param_summary(cfg)
+    assert 1.8 <= s["active_params_B"] <= 3.5          # the A2.7B class
+    assert s["active_params_B"] < s["total_params_B"] / 3
+
+
+def test_paper_arch_class():
+    cfg = get_config("qwen36-35b-a3b")
+    s = param_summary(cfg)
+    assert 25.0 <= s["total_params_B"] <= 40.0          # ~35B class
+    assert 2.0 <= s["active_params_B"] <= 4.5           # ~A3B class
+
+
+def test_shape_applicability():
+    # long_500k only for sub-quadratic archs
+    assert shape_applies(get_config("xlstm-350m"), SHAPES["long_500k"])
+    assert shape_applies(get_config("recurrentgemma-2b"), SHAPES["long_500k"])
+    assert not shape_applies(get_config("starcoder2-7b"), SHAPES["long_500k"])
+    for arch in ASSIGNED_ARCHS:
+        shapes = applicable_shapes(get_config(arch))
+        assert len(shapes) in (3, 4)

@@ -1,0 +1,144 @@
+"""Residency manager, policies, slot store, feasibility (Fig. 3 semantics)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.config import ResidencyConfig, get_config
+from repro.configs import reduce_for_smoke
+from repro.core import (
+    InitializationError,
+    RotaryResidencyManager,
+    SlotStore,
+    check_feasibility,
+    dequantize_int8,
+    make_policy,
+    quantize_int8,
+)
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+def _mgr(mode="rotary", slots=5, quant=None):
+    cfg = reduce_for_smoke(get_config("qwen36-35b-a3b"))
+    rng = np.random.default_rng(0)
+    m = cfg.moe
+    hw = [
+        {
+            "w_gate": rng.standard_normal((m.num_experts, cfg.d_model, m.expert_d_ff)).astype(np.float32),
+            "w_up": rng.standard_normal((m.num_experts, cfg.d_model, m.expert_d_ff)).astype(np.float32),
+            "w_down": rng.standard_normal((m.num_experts, m.expert_d_ff, cfg.d_model)).astype(np.float32),
+        }
+        for _ in range(cfg.num_layers)
+    ]
+    rescfg = ResidencyConfig(mode=mode, num_slots=slots, quantization=quant)
+    return cfg, RotaryResidencyManager(cfg, rescfg, hw, batch=1, cache_len=64), hw
+
+
+def test_full_policy_never_misses():
+    cfg, mgr, _ = _mgr("full", 0)
+    ids = np.random.default_rng(1).integers(0, cfg.moe.num_experts, (4, 2))
+    lut, miss = mgr.resolve(0, ids)
+    assert not miss.any()
+    assert mgr.stats.hit_rate == 1.0
+
+
+def test_rotary_prepare_loads_window():
+    cfg, mgr, hw = _mgr("rotary", 5)
+    e = cfg.moe.num_experts
+    demand = np.zeros(e)
+    demand[:5] = 1.0
+    mgr.prepare_layer(0, demand)
+    lut = mgr.policies[0].lut
+    assert set(np.flatnonzero(demand).tolist()) <= set(lut.resident_experts.tolist())
+
+
+def test_slot_contents_match_host_weights():
+    """What sits in a slot is exactly the host expert the LUT claims."""
+    cfg, mgr, hw = _mgr("rotary", 5)
+    demand = np.random.default_rng(2).random(cfg.moe.num_experts)
+    mgr.prepare_layer(0, demand)
+    lut = mgr.policies[0].lut
+    tree = mgr.stores[0].as_pytree()
+    for e in lut.resident_experts:
+        s = lut.slot_of(int(e))
+        np.testing.assert_allclose(            # store dtype is bf16
+            np.asarray(tree["w_up"][s], np.float32), hw[0]["w_up"][e],
+            atol=0.02, rtol=0.02,
+        )
+
+
+def test_lru_blocking_load_on_miss():
+    cfg, mgr, _ = _mgr("lru", 5)
+    ids = np.asarray([[0, 1]], np.int32)
+    lut, miss = mgr.resolve(0, ids)
+    assert not miss.any()                      # LRU loads on miss
+    assert mgr.stats.layer(0).loads >= 2
+
+
+def test_static_policy_leaves_misses_to_host():
+    cfg, mgr, _ = _mgr("static", 5)
+    e = cfg.moe.num_experts
+    demand = np.zeros(e); demand[:5] = 1.0
+    mgr.prepare_layer(0, demand)
+    ids = np.asarray([[e - 1, e - 2]], np.int32)   # cold experts
+    lut, miss = mgr.resolve(0, ids)
+    assert miss.all()
+
+
+def test_feasibility_two_sided():
+    cfg = reduce_for_smoke(get_config("qwen36-35b-a3b"))
+    # floor: not enough slots for top_k + margin
+    r = check_feasibility(cfg, ResidencyConfig(mode="rotary", num_slots=2,
+                                               prefetch_margin=2),
+                          batch=1, cache_len=64)
+    assert not r.ok and "margin" in r.reason
+    # ceiling: tiny HBM budget
+    r2 = check_feasibility(cfg, ResidencyConfig(mode="rotary", num_slots=6,
+                                                hbm_budget_bytes=1024),
+                           batch=1, cache_len=64)
+    assert not r2.ok and "budget" in r2.reason
+    # fine
+    r3 = check_feasibility(cfg, ResidencyConfig(mode="rotary", num_slots=6),
+                           batch=1, cache_len=64)
+    assert r3.ok
+
+
+def test_manager_raises_on_infeasible():
+    with pytest.raises(InitializationError):
+        _mgr("rotary", 2)
+
+
+@given(st.integers(1, 6), st.integers(4, 40), st.integers(3, 17))
+def test_quantize_roundtrip_bounded(seed, rows, cols):
+    w = np.random.default_rng(seed).standard_normal((rows, cols)).astype(np.float32)
+    q, scale = quantize_int8(w)
+    back = np.asarray(dequantize_int8(jnp.asarray(q), jnp.asarray(scale), jnp.float32))
+    err = np.abs(back - w)
+    # error bounded by half a quantization step per channel
+    assert (err <= (np.abs(w).max(axis=0) / 127.0 + 1e-6)).all()
+
+
+def test_int8_slot_store_halves_bytes():
+    shapes = {"w_up": (16, 24), "w_down": (24, 16)}
+    fp = SlotStore(4, shapes, jnp.bfloat16)
+    q = SlotStore(4, shapes, jnp.bfloat16, quantization="int8")
+    assert q.bytes_per_expert < fp.bytes_per_expert * 0.75
+
+
+def test_int8_residency_engine_quality():
+    """int8 slots (Q4_K_M analog): dequantized compute stays close to fp."""
+    cfg, mgr_fp, hw = _mgr("rotary", 5)
+    _, mgr_q, _ = _mgr("rotary", 5, quant="int8")
+    demand = np.zeros(cfg.moe.num_experts); demand[:5] = 1.0
+    mgr_fp.prepare_layer(0, demand)
+    mgr_q.prepare_layer(0, demand)
+    t_fp = mgr_fp.stores[0].as_pytree()
+    t_q = mgr_q.stores[0].as_pytree()
+    lut = mgr_fp.policies[0].lut
+    s = lut.slot_of(int(lut.resident_experts[0]))
+    a = np.asarray(t_fp["w_up"][s], np.float32)
+    b = np.asarray(t_q["w_up"][s], np.float32)
+    assert np.abs(a - b).max() < np.abs(a).max() / 64

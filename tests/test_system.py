@@ -1,0 +1,69 @@
+"""End-to-end system tests: train -> checkpoint -> serve with rotary residency.
+
+This is the full paper loop on a reduced model: train a small MoE, save, reload,
+then execute it under rotary residency with the slot budget below the expert
+count — generation must match the full-residency reference token-for-token.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from conftest import params_for
+from repro.config import ResidencyConfig, RunConfig
+from repro.checkpoint import CheckpointManager
+from repro.core import RotaryEngine
+from repro.data import SyntheticSpec, batch_at_step
+from repro.models.transformer import Runtime
+from repro.training import init_train_state, make_train_step
+
+
+def test_train_checkpoint_serve_rotary(tmp_path, rng):
+    cfg, params = params_for("qwen36-35b-a3b")
+    rt = Runtime(cache_len=48)
+    run = RunConfig(learning_rate=1e-3, warmup_steps=1)
+    spec = SyntheticSpec(vocab_size=cfg.vocab_size, seq_len=24, global_batch=2,
+                         kind="topic", num_topics=3, topic_len=8)
+    state = init_train_state(cfg, params)
+    step_fn = jax.jit(make_train_step(cfg, rt, run))
+    for i in range(3):
+        t, l = batch_at_step(spec, i)
+        state, m = step_fn(state, jnp.asarray(t), jnp.asarray(l))
+    assert np.isfinite(float(m["loss"]))
+
+    mgr = CheckpointManager(str(tmp_path), keep=1, async_save=False)
+    mgr.save(3, state)
+    _, restored, _ = mgr.restore_latest(state)
+
+    prompt = rng.integers(0, cfg.vocab_size, (1, 8)).astype(np.int32)
+    eng_full = RotaryEngine(cfg, restored["params"],
+                            ResidencyConfig(mode="full"), rt=rt, batch=1)
+    ref_tokens = eng_full.generate(prompt, 6)
+    eng_rot = RotaryEngine(cfg, restored["params"],
+                           ResidencyConfig(mode="rotary", num_slots=5),
+                           rt=rt, batch=1)
+    rot_tokens = eng_rot.generate(prompt, 6)
+    np.testing.assert_array_equal(ref_tokens, rot_tokens)
+    # residency actually constrained: fewer slots than experts, some traffic
+    assert eng_rot.manager.num_slots < cfg.moe.num_experts
+    assert eng_rot.stats.bytes_loaded > 0
+
+
+def test_residency_policy_ordering(rng):
+    """On a topic-cycling workload the rotary policy's hit rate should at
+    least match static and keep loads off the critical path (stall ~ 0 vs
+    LRU blocking loads)."""
+    cfg, params = params_for("qwen2-moe-a2.7b")
+    rt = Runtime(cache_len=64)
+    spec = SyntheticSpec(vocab_size=cfg.vocab_size, seq_len=16, global_batch=2,
+                         kind="topic", num_topics=2, topic_len=8, seed=3)
+    prompt, _ = batch_at_step(spec, 0)
+    stats = {}
+    for mode in ("rotary", "lru", "static"):
+        eng = RotaryEngine(cfg, params,
+                           ResidencyConfig(mode=mode, num_slots=5),
+                           rt=rt, batch=2)
+        eng.generate(prompt.astype(np.int32), 10)
+        stats[mode] = eng.stats
+    assert stats["rotary"].hit_rate >= stats["static"].hit_rate - 0.05
+    assert stats["lru"].stall_s > 0.0
+    assert stats["rotary"].stall_s <= stats["lru"].stall_s + 1e-9
