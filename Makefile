@@ -1,0 +1,16 @@
+# One reproducible invocation per CI concern (documented in ROADMAP.md).
+PYTHON ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: dev-deps tier1 ci bench
+
+dev-deps:          ## install test-only deps (hypothesis property coverage)
+	$(PYTHON) -m pip install -r requirements-dev.txt
+
+tier1:             ## the ROADMAP tier-1 gate (skips hypothesis modules if absent)
+	$(PYTHON) -m pytest -x -q
+
+ci: dev-deps tier1 ## "green" in one command: dev deps + full tier-1 run
+
+bench:             ## all paper-table / kernel / hot-path benchmarks
+	$(PYTHON) -m benchmarks.run

@@ -22,6 +22,7 @@ def run() -> Dict:
     import jax.numpy as jnp
     from jax.sharding import PartitionSpec as P
 
+    from repro.compat import shard_map
     from repro.training.compression import compressed_psum_pod
 
     devs = jax.local_device_count()
@@ -30,7 +31,7 @@ def run() -> Dict:
     ef = {"w": jnp.zeros((1, 64, 64), jnp.bfloat16)}
 
     def step(g_, ef_):
-        f = jax.shard_map(
+        f = shard_map(
             lambda gg, ee: compressed_psum_pod(gg, ee, axis="pod", pod_count=1),
             mesh=mesh, in_specs=(P(), P("pod")), out_specs=(P(), P("pod")),
             check_vma=False,

@@ -87,7 +87,7 @@ def run() -> List[Dict]:
         "v5e_bound": "memory (KV stream)",
     })
 
-    # topk gate
+    # topk gate (prefill shape)
     t4, e4, k4 = 4096, 128, 8
     logits = jnp.asarray(rng.standard_normal((t4, e4)), jnp.float32)
     jit_ref4 = jax.jit(lambda l: ref.topk_gate_ref(l, k4))
@@ -99,6 +99,27 @@ def run() -> List[Dict]:
         "allclose_err": float(jnp.abs(w_k - w_r).max()) + float((ids_k != ids_r).sum()),
         "arith_intensity": 0.1, "v5e_bound": "memory (one pass)",
     })
+
+    # topk gate at DECODE shapes (the RotaryEngine hot path routes [B, E]
+    # per MoE layer per token) + the backend-dispatching route_topk wrapper
+    from repro.kernels.topk_gate import route_topk
+
+    for tb in (1, 2, 8):
+        logits_d = jnp.asarray(rng.standard_normal((tb, e4)), jnp.float32)
+        jit_refd = jax.jit(lambda l: ref.topk_gate_ref(l, k4))
+        t_refd = _time(jit_refd, logits_d)
+        ids_k, w_k = ops.topk_gate(logits_d, k4)
+        ids_a, w_a = jax.jit(lambda l: route_topk(l, k4))(logits_d)
+        ids_r, w_r = jit_refd(logits_d)
+        err = (
+            float(jnp.abs(w_k - w_r).max()) + float((ids_k != ids_r).sum())
+            + float(jnp.abs(w_a - w_r).max()) + float((ids_a != ids_r).sum())
+        )
+        rows.append({
+            "kernel": f"topk_gate_decode_b{tb}", "ref_us": round(t_refd * 1e6, 1),
+            "allclose_err": err,
+            "arith_intensity": 0.1, "v5e_bound": "memory (one pass)",
+        })
     return rows
 
 

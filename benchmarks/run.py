@@ -12,6 +12,7 @@ MODULES = [
     ("table5_smoke", "Table 5: smoke-set completion"),
     ("fig3_configs", "Fig. 3: configuration feasibility sweep"),
     ("residency_policies", "§4: rotary vs LRU vs static vs full"),
+    ("decode_hot_path", "decode hot path: device-resident step vs seed engine"),
     ("kernels_bench", "Pallas kernels vs references"),
     ("compression_bench", "int8+EF cross-pod gradient compression"),
 ]

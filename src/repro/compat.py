@@ -1,0 +1,71 @@
+"""JAX version compatibility shims (single home for all version probing).
+
+The codebase targets the modern JAX API surface (``jax.shard_map`` with
+``check_vma=``/``axis_names=``, ``jax.sharding.get_abstract_mesh``,
+``jax.sharding.AxisType``); this container pins jax 0.4.37 where shard_map
+still lives in ``jax.experimental.shard_map`` with the older
+``check_rep=``/``auto=`` spelling and there is no abstract-mesh query. Every
+call site imports from here so the fallback logic exists exactly once.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Set
+
+import jax
+
+_HAS_NATIVE_SHARD_MAP = hasattr(jax, "shard_map")
+
+if not _HAS_NATIVE_SHARD_MAP:
+    from jax.experimental.shard_map import shard_map as _legacy_shard_map
+
+
+def shard_map(
+    f,
+    *,
+    mesh: Any,
+    in_specs: Any,
+    out_specs: Any,
+    check_vma: bool = True,
+    axis_names: Optional[Set[str]] = None,
+):
+    """``jax.shard_map`` when available, else the 0.4.x experimental one.
+
+    Translations for the legacy API:
+      * ``check_vma``   -> ``check_rep`` (same meaning, renamed upstream)
+      * ``axis_names``  -> ``auto = mesh axes NOT named`` (the legacy API
+        names the automatic axes instead of the manual ones)
+    """
+    if _HAS_NATIVE_SHARD_MAP:
+        kw: dict = {"check_vma": check_vma}
+        if axis_names is not None:
+            kw["axis_names"] = set(axis_names)
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw
+        )
+    kw = {"check_rep": check_vma}
+    if axis_names is not None:
+        kw["auto"] = frozenset(mesh.axis_names) - set(axis_names)
+    return _legacy_shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw
+    )
+
+
+def get_abstract_mesh() -> Optional[Any]:
+    """Ambient abstract mesh, or None when the running JAX cannot report one
+    (callers treat None as "no manual axes in scope")."""
+    fn = getattr(jax.sharding, "get_abstract_mesh", None)
+    if fn is None:
+        return None
+    return fn()
+
+
+def manual_axis_names(am: Any) -> Set[str]:
+    """Names of mesh axes that are Manual in the ambient shard_map context."""
+    if am is None or not getattr(am, "axis_names", None):
+        return set()
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None or not hasattr(am, "axis_types"):
+        return set()
+    return {
+        n for n, t in zip(am.axis_names, am.axis_types) if t == axis_type.Manual
+    }

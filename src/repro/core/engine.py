@@ -3,10 +3,9 @@
 Execution per decode step (the paper's §4 loop, DESIGN.md §2 "engine path"):
 
   embed -> for each layer:
-    attn half (device jit)
-    [MoE layers] router on the *normed* hidden -> resolve LUT (LRU may issue a
-    blocking load here) -> gathered slot compute on device (misses dropped) ->
-    host GEMM correction for misses (n-cpu-moe analog) -> exact residual
+    attn half (device jit) -> fused router top-k ON DEVICE (Pallas topk_gate on
+    TPU/GPU, lax.top_k elsewhere) -> gathered slot compute against the
+    persistent device LUT (misses classified in-kernel, dropped) ->
     pre-gating: layer l's hidden predicts layer l+1's demand; the manager
     rotates l+1's slots and issues uploads BEFORE l+1 executes (double-buffered
     prefetch — transfers hide behind layer l's compute in the clock model)
@@ -14,6 +13,31 @@ Execution per decode step (the paper's §4 loop, DESIGN.md §2 "engine path"):
 
 The full model weights live in host memory (numpy); only attention/static
 weights plus each layer's slot group are device-resident, mirroring Figure 1.
+
+Decode hot path (device-resident, default for non-LRU policies)
+---------------------------------------------------------------
+The per-layer walk never drains the device queue: routing happens inside the
+jitted attention half, the slot LUT is a persistent device array patched in
+place on rotation, and the small per-layer host reads (hidden state for the
+demand predictor, routed ids/weights for EMA feedback) are issued as async
+copies that overlap the already-queued MoE compute. The only queue-draining
+device->host transfer per token is the final logits pull; miss masks ride the
+same materialization and are inspected afterwards.
+
+Exactness under misses is preserved by REPLAY: when the end-of-step miss masks
+show a routed expert was not resident, the step is re-executed from its saved
+input with the per-layer residency snapshots (functional jax arrays, so the
+snapshots are free) and the seed-style host GEMM correction applied between
+layers. Tokens are therefore identical to the per-layer sync path for every
+policy; on miss-free steps the predictor/rotation/stats bookkeeping is
+bit-identical too (on replayed steps the demand predictor saw the optimistic
+hiddens — the mechanism is unchanged, only its input differs).
+
+The legacy behaviour survives behind two switches: ``host_routing=True``
+reproduces the seed engine (blocking logits pull + numpy softmax/top-k + LUT
+re-upload per layer — kept as the benchmark baseline), and LRU residency
+automatically uses the per-layer sync walk because its reactive blocking loads
+need routed ids on host mid-step.
 """
 from __future__ import annotations
 
@@ -25,10 +49,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.config.base import ModelConfig, ResidencyConfig
-from repro.core.predictor import DemandPredictor, softmax as np_softmax
+from repro.core.predictor import DemandPredictor, host_topk_route
 from repro.core.residency import RotaryResidencyManager
 from repro.core.stats import EngineStats
 from repro.core.transfer import CostModel, TransferClock
+from repro.kernels.topk_gate import route_topk
 from repro.models import transformer as tfm
 from repro.models import moe as moe_mod
 from repro.models.layers import apply_norm
@@ -58,6 +83,7 @@ class RotaryEngine:
         cost: Optional[CostModel] = None,
         batch: int = 1,
         seed: int = 0,
+        host_routing: bool = False,
     ):
         assert cfg.has_moe, "RotaryEngine requires an MoE architecture"
         self.cfg = cfg
@@ -65,6 +91,7 @@ class RotaryEngine:
         self.rt = rt or Runtime(cache_len=1024)
         self.cost = cost or CostModel()
         self.batch = batch
+        self.host_routing = host_routing
         self.stats = EngineStats()
         self.clock = TransferClock(self.cost)
 
@@ -110,7 +137,13 @@ class RotaryEngine:
             batch=batch, cache_len=self.rt.cache_len,
             cost=self.cost, stats=self.stats, seed=seed,
         )
-        self._jits: Dict[Tuple[str, str], Callable] = {}
+        # LRU answers misses with reactive blocking loads mid-step: that needs
+        # routed ids on host before the next layer, i.e. the sync walk
+        self._hot_decode = not host_routing and not any(
+            getattr(p, "needs_sync_resolve", False) for p in self.manager.policies
+        )
+        self._jits: Dict[Tuple, Callable] = {}
+        self._head_jit = jax.jit(self._lm_head_impl)
         self._warm_start()
 
     # ------------------------------------------------------------------
@@ -121,15 +154,17 @@ class RotaryEngine:
             self.manager.prepare_layer(li, self.predictor.smoothed[li])
 
     # ------------------------------------------------------------------
-    # jitted pieces (one compile per (kind, mode))
+    # jitted pieces (one compile per (kind, mode, routed))
     # ------------------------------------------------------------------
-    def _block_fn(self, kind: str, mode: str) -> Callable:
-        key = (kind, mode)
+    def _block_fn(self, kind: str, mode: str, routed: bool = True) -> Callable:
+        key = (kind, mode, routed)
         if key in self._jits:
             return self._jits[key]
         cfg, rt = self.cfg, self.rt
 
         if kind == "attn_moe":
+            m = cfg.moe
+
             def attn_half(p, x, state, cur_len):
                 h = apply_norm(cfg.norm, p["ln1"], x)
                 if mode == "decode":
@@ -141,6 +176,13 @@ class RotaryEngine:
                 x_mid = x + y
                 h2 = apply_norm(cfg.norm, p["ln2"], x_mid)
                 logits = moe_mod.router_logits(p["moe"], h2.reshape(-1, x.shape[-1]))
+                if routed:
+                    # fused device routing: Pallas topk_gate on TPU/GPU,
+                    # lax.top_k fallback elsewhere — no host round-trip
+                    ids, weights = route_topk(
+                        logits, m.top_k, normalize=m.norm_topk_prob
+                    )
+                    return x_mid, h2, ids, weights, new_state
                 return x_mid, h2, logits, new_state
 
             def moe_half(p, x_mid, h2, ids, weights, slots, lut):
@@ -164,18 +206,49 @@ class RotaryEngine:
     def _embed(self, tokens: jax.Array) -> jax.Array:
         return jnp.take(self.embed_params["embed"], tokens, axis=0)
 
-    def _lm_head(self, h: jax.Array) -> jax.Array:
+    def _lm_head_impl(self, embed_params, h: jax.Array) -> jax.Array:
         cfg = self.cfg
-        hn = apply_norm(cfg.norm, self.embed_params["final_norm"], h)
+        hn = apply_norm(cfg.norm, embed_params["final_norm"], h)
         head = (
-            self.embed_params["embed"].T
+            embed_params["embed"].T
             if cfg.tie_embeddings
-            else self.embed_params["lm_head"]
+            else embed_params["lm_head"]
         )
         return hn @ head
 
+    def _lm_head(self, h: jax.Array) -> jax.Array:
+        return self._head_jit(self.embed_params, h)
+
     # ------------------------------------------------------------------
-    # core per-layer walk
+    # shared host-side pieces
+    # ------------------------------------------------------------------
+    def _host_correct(
+        self,
+        x: jax.Array,
+        moe_li: int,
+        h2: jax.Array,
+        ids: np.ndarray,
+        weights: np.ndarray,
+        miss: np.ndarray,
+    ) -> jax.Array:
+        """Seed-style exact host GEMM correction for missed experts."""
+        h2_np = np.asarray(h2, np.float32).reshape(ids.shape[0], -1)
+        corr = np.zeros_like(h2_np)
+        hw = self.host_experts[moe_li]
+        n_host = 0
+        for t_i, j in zip(*np.nonzero(miss)):
+            e = int(ids[t_i, j])
+            corr[t_i] += weights[t_i, j] * _np_ffn(hw, e, h2_np[t_i])
+            n_host += 1
+        x = x + jnp.asarray(corr, x.dtype).reshape(x.shape)
+        self.stats.layer(moe_li).host_computed += n_host
+        self.clock.host(
+            self.cost.host_compute_s(self.manager.host_expert_flops(n_host))
+        )
+        return x
+
+    # ------------------------------------------------------------------
+    # per-layer sync walk (prefill; decode for LRU / host_routing baseline)
     # ------------------------------------------------------------------
     def _run_layers(self, x: jax.Array, mode: str, cur_len: int) -> jax.Array:
         cfg = self.cfg
@@ -186,42 +259,34 @@ class RotaryEngine:
             state = self.state[li]
             if kind == "attn_moe":
                 moe_li = self.moe_index[li]
-                attn_half, moe_half = self._block_fn(kind, mode)
-                x_mid, h2, logits_dev, new_state = attn_half(p_l, x, state, cur)
+                # --- routing (host baseline or device-routed pull) --------
+                if self.host_routing:
+                    attn_half, moe_half = self._block_fn(kind, mode, routed=False)
+                    x_mid, h2, logits_dev, new_state = attn_half(p_l, x, state, cur)
+                    self.stats.sync_pulls += 1
+                    logits = np.asarray(logits_dev, np.float32)
+                    ids, weights = host_topk_route(
+                        logits, m.top_k, normalize=m.norm_topk_prob
+                    )
+                else:
+                    attn_half, moe_half = self._block_fn(kind, mode, routed=True)
+                    x_mid, h2, ids_dev, w_dev, new_state = attn_half(p_l, x, state, cur)
+                    self.stats.sync_pulls += 1
+                    ids = np.asarray(ids_dev)
+                    weights = np.asarray(w_dev)
                 self.state[li] = new_state
-                # --- routing on the true router output -------------------
-                logits = np.asarray(logits_dev, np.float32)
-                probs = np_softmax(logits, axis=-1)
-                k = m.top_k
-                ids = np.argsort(-probs, axis=-1)[:, :k].astype(np.int32)
-                weights = np.take_along_axis(probs, ids, axis=-1)
-                if m.norm_topk_prob:
-                    weights = weights / np.maximum(weights.sum(-1, keepdims=True), 1e-9)
                 # --- LUT resolve (LRU may block-load here) ----------------
-                lut_arr, miss = self.manager.resolve(moe_li, ids, clock)
+                _, miss = self.manager.resolve(moe_li, ids, clock)
                 slots_tree = self.manager.stores[moe_li].as_pytree()
-                x, miss_dev = moe_half(
+                lut_dev = self.manager.device_lut(moe_li)
+                x, _ = moe_half(
                     p_l, x_mid, h2,
                     jnp.asarray(ids), jnp.asarray(weights),
-                    slots_tree, jnp.asarray(lut_arr),
+                    slots_tree, lut_dev,
                 )
                 # --- host correction for misses ---------------------------
                 if miss.any() and self.rescfg.host_compute_misses:
-                    h2_np = np.asarray(h2, np.float32).reshape(ids.shape[0], -1)
-                    corr = np.zeros_like(h2_np)
-                    hw = self.host_experts[moe_li]
-                    n_host = 0
-                    for t_i, j in zip(*np.nonzero(miss)):
-                        e = int(ids[t_i, j])
-                        corr[t_i] += weights[t_i, j] * _np_ffn(hw, e, h2_np[t_i])
-                        n_host += 1
-                    x = x + jnp.asarray(corr, x.dtype).reshape(x.shape)
-                    self.stats.layer(moe_li).host_computed += n_host
-                    clock.host(
-                        self.cost.host_compute_s(
-                            self.manager.host_expert_flops(n_host)
-                        )
-                    )
+                    x = self._host_correct(x, moe_li, h2, ids, weights, miss)
                 # --- modeled device time for this layer -------------------
                 flops, byts = self._layer_cost(kind, x.shape, cur_len, hits=int((~miss).sum()))
                 clock.compute(self.cost.compute_s(flops, byts))
@@ -238,6 +303,143 @@ class RotaryEngine:
                 flops, byts = self._layer_cost(kind, x.shape, cur_len, hits=0)
                 clock.compute(self.cost.compute_s(flops, byts), needs_dma=False)
         return x
+
+    # ------------------------------------------------------------------
+    # device-resident decode hot path
+    # ------------------------------------------------------------------
+    def _decode_step_hot(self, tok: np.ndarray) -> np.ndarray:
+        """One decode step with a single queue-draining device->host pull.
+
+        Returns host logits [B, V]. See the module docstring for the design.
+        """
+        cur_len = self.cur_len
+        cur = jnp.int32(cur_len)
+        x = self._embed(jnp.asarray(tok)[:, None])
+        states_before = list(self.state)
+        x_ins: List[jax.Array] = []                         # per-layer input refs
+        snaps: Dict[int, Tuple[Any, jax.Array, int]] = {}   # li -> (slots, lut, moved)
+        pend: List[Tuple[int, int, np.ndarray, np.ndarray, jax.Array]] = []
+        order: List[Tuple] = []                             # modeled-clock ops
+        for li, (kind, p_l) in enumerate(self.layers):
+            x_ins.append(x)
+            state = self.state[li]
+            if kind == "attn_moe":
+                moe_li = self.moe_index[li]
+                attn_half, moe_half = self._block_fn(kind, "decode", routed=True)
+                x_mid, h2, ids_dev, w_dev, new_state = attn_half(p_l, x, state, cur)
+                slots_tree = self.manager.stores[moe_li].as_pytree()
+                lut_dev = self.manager.device_lut(moe_li)
+                x, miss_dev = moe_half(p_l, x_mid, h2, ids_dev, w_dev, slots_tree, lut_dev)
+                self.state[li] = new_state
+                # async D2H copies: by the time the host consumes these, the
+                # MoE half + next layer's slot uploads are already queued, so
+                # the reads overlap device work instead of draining the queue
+                for a in (h2, ids_dev, w_dev, miss_dev):
+                    a.copy_to_host_async()
+                ids = np.asarray(ids_dev)
+                weights = np.asarray(w_dev)
+                h2_np = np.asarray(h2, np.float32).reshape(ids.shape[0], -1)
+                self.stats.overlapped_pulls += 4
+                # --- pre-gate next layer + predictor feedback (seed order) --
+                nxt = (moe_li + 1) % self.num_moe_layers
+                demand = self.predictor.predict(nxt, h2_np)
+                moved = self.manager.prepare_layer(nxt, demand, clock=None)
+                self.predictor.observe(moe_li, ids, weights)
+                snaps[li] = (slots_tree, lut_dev, moved)
+                pend.append((li, moe_li, ids, weights, miss_dev))
+                order.append(("moe", li, moe_li, x.shape, moved))
+            else:
+                (block,) = self._block_fn(kind, "decode")
+                x, new_state = block(p_l, x, state if state else {}, cur)
+                self.state[li] = new_state
+                order.append(("plain", li, kind, x.shape))
+        logits_dev = self._lm_head(x[:, -1:])[:, 0]
+        logits = np.asarray(logits_dev)        # THE one queue-draining pull
+        self.stats.sync_pulls += 1
+        miss_by_li = {li: np.asarray(md) for (li, _, _, _, md) in pend}
+        missed = [li for (li, _, _, _, _) in pend if miss_by_li[li].any()]
+        start = (
+            missed[0]
+            if (missed and self.rescfg.host_compute_misses)
+            else len(self.layers)
+        )
+        # account stats + modeled clock for the (authoritative) prefix in the
+        # same sequence the sync walk would have used; layers before the first
+        # miss are exact as computed, so only the suffix needs replay
+        for (li, moe_li, ids, _, _) in pend:
+            if li >= start:
+                break
+            self.manager.record_routing(moe_li, ids, miss_by_li[li])
+        for op in order:
+            if op[1] >= start:
+                break
+            if op[0] == "moe":
+                _, li, moe_li, shape, moved = op
+                hits = int((~miss_by_li[li]).sum())
+                flops, byts = self._layer_cost("attn_moe", shape, cur_len, hits=hits)
+                self.clock.compute(self.cost.compute_s(flops, byts))
+                self.clock.prefetch(moved)
+            else:
+                _, li, kind, shape = op
+                flops, byts = self._layer_cost(kind, shape, cur_len, hits=0)
+                self.clock.compute(self.cost.compute_s(flops, byts), needs_dma=False)
+        if start < len(self.layers):
+            return self._replay_step(x_ins[start], states_before, snaps, start)
+        return logits
+
+    def _replay_step(
+        self,
+        x0: jax.Array,
+        states_before: List[Any],
+        snaps: Dict[int, Tuple[Any, jax.Array, int]],
+        start: int,
+    ) -> np.ndarray:
+        """Exact re-execution of a decode-step SUFFIX after an observed miss.
+
+        Layers before ``start`` (the first layer whose optimistic pass missed)
+        saw exactly the inputs/residency the sync walk would have used, so
+        their optimistic outputs and KV writes stand. From ``start`` on, the
+        step re-executes with the per-layer residency SNAPSHOTS captured by
+        the hot pass (the slot buffers / LUT each layer actually gathered
+        from), re-deriving routing from the corrected activations and applying
+        the host GEMM correction between layers exactly like the sync walk.
+        Rotation / prefetch already happened in the hot pass and is not
+        repeated; its modeled DMA time is charged here at the seed position in
+        the sequence.
+        """
+        cur_len = self.cur_len
+        cur = jnp.int32(cur_len)
+        clock = self.clock
+        x = x0
+        for li in range(start, len(self.layers)):
+            kind, p_l = self.layers[li]
+            state = states_before[li]
+            if kind == "attn_moe":
+                moe_li = self.moe_index[li]
+                attn_half, moe_half = self._block_fn(kind, "decode", routed=True)
+                x_mid, h2, ids_dev, w_dev, new_state = attn_half(p_l, x, state, cur)
+                self.state[li] = new_state
+                slots_tree, lut_dev, moved = snaps[li]
+                x, miss_dev = moe_half(p_l, x_mid, h2, ids_dev, w_dev, slots_tree, lut_dev)
+                ids = np.asarray(ids_dev)
+                weights = np.asarray(w_dev)
+                miss = np.asarray(miss_dev)
+                self.stats.sync_pulls += 1
+                self.manager.record_routing(moe_li, ids, miss)
+                if miss.any() and self.rescfg.host_compute_misses:
+                    x = self._host_correct(x, moe_li, h2, ids, weights, miss)
+                flops, byts = self._layer_cost(kind, x.shape, cur_len, hits=int((~miss).sum()))
+                clock.compute(self.cost.compute_s(flops, byts))
+                clock.prefetch(moved)
+            else:
+                (block,) = self._block_fn(kind, "decode")
+                x, new_state = block(p_l, x, state if state else {}, cur)
+                self.state[li] = new_state
+                flops, byts = self._layer_cost(kind, x.shape, cur_len, hits=0)
+                clock.compute(self.cost.compute_s(flops, byts), needs_dma=False)
+        logits = np.asarray(self._lm_head(x[:, -1:])[:, 0])
+        self.stats.sync_pulls += 1
+        return logits
 
     def _layer_cost(self, kind: str, xshape, cur_len: int, hits: int) -> Tuple[float, float]:
         """(flops, bytes) estimate of one layer at current shapes (modeled clock)."""
@@ -297,6 +499,8 @@ class RotaryEngine:
         seed: int = 0,
     ) -> np.ndarray:
         """Generate ``steps`` tokens. Returns [B, steps]."""
+        from repro.core.predictor import softmax as np_softmax
+
         rng = np.random.default_rng(seed)
         out = np.zeros((self.batch, steps), np.int32)
         logits = last_logits
@@ -310,9 +514,13 @@ class RotaryEngine:
                     [rng.choice(p.shape[-1], p=row) for row in p], np.int32
                 )
             out[:, i] = tok
-            x = self._embed(jnp.asarray(tok)[:, None])
-            x = self._run_layers(x, "decode", cur_len=self.cur_len)
-            logits = np.asarray(self._lm_head(x[:, -1:])[:, 0])
+            if self._hot_decode:
+                logits = self._decode_step_hot(tok)
+            else:
+                x = self._embed(jnp.asarray(tok)[:, None])
+                x = self._run_layers(x, "decode", cur_len=self.cur_len)
+                logits = np.asarray(self._lm_head(x[:, -1:])[:, 0])
+                self.stats.sync_pulls += 1
             self.cur_len += 1
             self.stats.steps += 1
             self.stats.tokens += self.batch
@@ -321,6 +529,7 @@ class RotaryEngine:
         self.stats.transfer_s = self.clock.transfer_s
         self.stats.stall_s = self.clock.stall_s
         self.stats.host_compute_s = self.clock.host_s
+        self.last_logits = logits          # resume point for chained decodes
         return out
 
     def generate(self, prompt: np.ndarray, max_new: int, **kw) -> np.ndarray:

@@ -19,6 +19,12 @@ class SlotLUT:
         self.miss = num_slots                       # sentinel: trailing zero slot
         self.e2s = np.full((num_experts,), self.miss, np.int32)
         self.s2e = np.full((num_slots,), -1, np.int32)
+        # incremental-device-sync bookkeeping: ``version`` counts mutations,
+        # ``_dirty`` holds expert ids whose e2s entry changed since the last
+        # ``take_dirty`` (the residency manager patches only those entries of
+        # its persistent device LUT copy instead of re-uploading [E] per layer)
+        self.version = 0
+        self._dirty: set = set()
 
     # -- queries ----------------------------------------------------------
     def slot_of(self, expert: int) -> int:
@@ -42,6 +48,12 @@ class SlotLUT:
         """Device-uploadable [E] int32 (missing experts -> miss sentinel)."""
         return self.e2s.copy()
 
+    def take_dirty(self) -> np.ndarray:
+        """Expert ids mutated since the previous call (sorted, then cleared)."""
+        idx = np.fromiter(sorted(self._dirty), np.int64, len(self._dirty))
+        self._dirty.clear()
+        return idx
+
     # -- updates ----------------------------------------------------------
     def assign(self, expert: int, slot: int) -> int:
         """Bind expert -> slot, evicting any previous occupant. Returns evicted
@@ -51,11 +63,14 @@ class SlotLUT:
         evicted = int(self.s2e[slot])
         if evicted >= 0:
             self.e2s[evicted] = self.miss
+            self._dirty.add(evicted)
         prev_slot = int(self.e2s[expert])
         if prev_slot != self.miss:
             self.s2e[prev_slot] = -1
         self.e2s[expert] = slot
         self.s2e[slot] = expert
+        self._dirty.add(int(expert))
+        self.version += 1
         return evicted
 
     def evict(self, expert: int) -> None:
@@ -63,6 +78,8 @@ class SlotLUT:
         if slot != self.miss:
             self.s2e[slot] = -1
             self.e2s[expert] = self.miss
+            self._dirty.add(int(expert))
+            self.version += 1
 
     def check_consistent(self) -> None:
         """Invariant: e2s and s2e are mutually inverse partial bijections."""

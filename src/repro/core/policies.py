@@ -23,6 +23,10 @@ Load = Tuple[int, int]   # (expert, slot)
 
 class ResidencyPolicy:
     name = "base"
+    # True for policies whose miss handling mutates residency MID-step (they
+    # need routed ids on host before the next layer runs, forcing the engine's
+    # per-layer sync walk instead of the device-resident hot path)
+    needs_sync_resolve = False
 
     def __init__(self, num_experts: int, num_slots: int):
         self.lut = SlotLUT(num_experts, num_slots)
@@ -91,6 +95,7 @@ class LruPolicy(ResidencyPolicy):
     that replaces the least-recently-used slot."""
 
     name = "lru"
+    needs_sync_resolve = True
 
     def __init__(self, num_experts: int, num_slots: int):
         super().__init__(num_experts, num_slots)

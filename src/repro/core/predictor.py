@@ -19,6 +19,23 @@ def softmax(x: np.ndarray, axis: int = -1) -> np.ndarray:
     return e / e.sum(axis=axis, keepdims=True)
 
 
+def host_topk_route(
+    logits: np.ndarray, k: int, *, normalize: bool = True
+) -> "tuple[np.ndarray, np.ndarray]":
+    """Host-side router: logits [T, E] -> (ids [T, k] int32, weights [T, k] f32).
+
+    Tie-breaking is lowest-index-wins (``kind="stable"`` on the descending
+    sort), matching ``jax.lax.top_k`` and the Pallas ``topk_gate`` kernel so the
+    host and device routing paths pick identical experts on tied probabilities.
+    """
+    probs = softmax(np.asarray(logits, np.float32), axis=-1)
+    ids = np.argsort(-probs, axis=-1, kind="stable")[:, :k].astype(np.int32)
+    weights = np.take_along_axis(probs, ids, axis=-1)
+    if normalize:
+        weights = weights / np.maximum(weights.sum(-1, keepdims=True), 1e-9)
+    return ids, weights
+
+
 class DemandPredictor:
     """Per-model predictor over ``num_layers`` MoE layers.
 

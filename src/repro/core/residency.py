@@ -88,7 +88,7 @@ def check_feasibility(
                 cap = min(a.window, cache_len) if (k == "local_attn" and a.window) else cache_len
                 kv_bytes += 2 * batch * cap * a.num_kv_heads * a.head_dim * dtype_bytes
     static_bytes = _attention_static_bytes(cfg, dtype_bytes)
-    act_bytes = 4 * batch * max(cache_len, 1) * 0 + 8 * batch * cfg.d_model * dtype_bytes * 16
+    act_bytes = 8 * batch * cfg.d_model * dtype_bytes * 16
     total = slot_bytes + kv_bytes + static_bytes + act_bytes
 
     if rescfg.mode != "full" and slots < min_slots:
@@ -155,6 +155,10 @@ class RotaryResidencyManager:
                     store.write(e, {n: hw[n][e] for n in hw})
             self.stores.append(store)
             self.policies.append(policy)
+        # persistent device-resident LUT per layer (patched incrementally on
+        # rotation; never re-materialized per decode layer) + stacked-tree cache
+        self._lut_dev: List[Optional[jnp.ndarray]] = [None] * len(host_experts)
+        self._seg_cache: Dict[int, Tuple[Tuple[int, ...], Any]] = {}
 
     # ------------------------------------------------------------------
     def prepare_layer(self, layer: int, demand: np.ndarray, clock: Optional[TransferClock] = None) -> int:
@@ -212,20 +216,70 @@ class RotaryResidencyManager:
         return lut.as_array(), miss
 
     # ------------------------------------------------------------------
+    def device_lut(self, layer: int) -> jnp.ndarray:
+        """The persistent device copy of ``layer``'s LUT.
+
+        First call uploads the full [E] int32 table; later calls patch only the
+        entries the policy mutated since (``SlotLUT.take_dirty``), so steady-
+        state rotation costs a handful of scattered int32 updates instead of a
+        fresh host->device array per MoE layer per decode step.
+        """
+        lut = self.policies[layer].lut
+        cached = self._lut_dev[layer]
+        if cached is None:
+            lut.take_dirty()
+            cached = jnp.asarray(lut.as_array())
+        else:
+            idx = lut.take_dirty()
+            if idx.size:
+                if idx.size > lut.num_experts // 2:
+                    cached = jnp.asarray(lut.as_array())
+                else:
+                    cached = cached.at[jnp.asarray(idx, jnp.int32)].set(
+                        jnp.asarray(lut.e2s[idx])
+                    )
+        self._lut_dev[layer] = cached
+        return cached
+
+    def record_routing(self, layer: int, ids: np.ndarray, miss: np.ndarray) -> None:
+        """Hit/miss accounting + policy usage feedback for routing that was
+        classified ON DEVICE (hot path) — the bookkeeping half of ``resolve``
+        without the host-side LUT lookup or reactive loads."""
+        self.policies[layer].touch(np.unique(ids))
+        ls = self.stats.layer(layer)
+        ls.hits += int((~miss).sum())
+        ls.misses += int(miss.sum())
+
+    # ------------------------------------------------------------------
     def layer_residency(self, layer: int) -> Dict[str, Any]:
         """{slots, lut} pytree for ``decode_model`` / ``_apply_block``."""
         return {
             "slots": self.stores[layer].as_pytree(),
-            "lut": jnp.asarray(self.policies[layer].lut.as_array()),
+            "lut": self.device_lut(layer),
         }
 
     def stacked_residency(self) -> Any:
-        """Residency pytree stacked per segment (whole-model compiled path)."""
+        """Residency pytree stacked per segment (whole-model compiled path).
+
+        Cached per segment keyed on (store.version, lut.version) of every rep:
+        a serving tick only rebuilds (and re-uploads) the segments whose slots
+        actually rotated since the previous tick.
+        """
         segs = []
         li = 0
-        for unit, reps in self.cfg.segments:
+        for si, (unit, reps) in enumerate(self.cfg.segments):
             if not any(k == "attn_moe" for k in unit):
                 segs.append({})
+                continue
+            key = tuple(
+                v
+                for r in range(reps)
+                for v in (self.stores[li + r].version, self.policies[li + r].lut.version)
+            )
+            hit = self._seg_cache.get(si)
+            if hit is not None and hit[0] == key:
+                segs.append(hit[1])
+                li += reps
                 continue
             per_rep = [self.layer_residency(li + r) for r in range(reps)]
             li += reps
@@ -236,6 +290,7 @@ class RotaryResidencyManager:
                 },
                 "lut": jnp.stack([p["lut"] for p in per_rep]),
             }
+            self._seg_cache[si] = (key, stacked)
             segs.append(stacked)
         return tuple(segs)
 

@@ -46,6 +46,7 @@ class SlotStore:
         self.num_slots = num_slots
         self.dtype = jnp.dtype(dtype)
         self.quantization = quantization
+        self.version = 0                # bumped per write (stacked-cache key)
         store_dtype = jnp.int8 if quantization == "int8" else self.dtype
         self.buffers: Params = {
             name: jnp.zeros((num_slots + 1,) + shape, store_dtype)
@@ -75,6 +76,7 @@ class SlotStore:
     def write(self, slot: int, expert_weights: Dict[str, np.ndarray]) -> int:
         """Upload one expert into ``slot``. Returns bytes moved host->device."""
         assert 0 <= slot < self.num_slots, f"slot {slot} out of range"
+        self.version += 1
         moved = 0
         for name, w in expert_weights.items():
             w = np.asarray(w)

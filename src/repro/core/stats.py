@@ -35,6 +35,9 @@ class EngineStats:
     stall_s: float = 0.0            # transfer time NOT hidden behind compute
     host_compute_s: float = 0.0     # modeled host GEMM time for misses
     wall_s: float = 0.0             # measured wall time (reduced model, CPU)
+    sync_pulls: int = 0             # queue-draining device->host reads (the
+                                    # hot decode path does exactly 1 per token)
+    overlapped_pulls: int = 0       # pipelined reads that overlap queued compute
 
     def layer(self, idx: int) -> LayerStats:
         return self.layers.setdefault(idx, LayerStats())
@@ -75,4 +78,6 @@ class EngineStats:
             ),
             "measured_wall_s": round(self.wall_s, 3),
             "stall_s": round(self.stall_s, 4),
+            "sync_pulls": self.sync_pulls,
+            "overlapped_pulls": self.overlapped_pulls,
         }

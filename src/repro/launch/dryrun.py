@@ -47,7 +47,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, variant: str,
     from repro.config import get_config, ShardingConfig
     from repro.configs.shapes import SHAPES
     from repro.launch import specs as S
-    from repro.launch.hlo_analysis import analyze_hlo
+    from repro.launch.hlo_analysis import analyze_hlo, xla_cost_analysis
     from repro.launch.mesh import make_production_mesh
     from repro.models.params import analytic_params
 
@@ -105,7 +105,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, variant: str,
             + ma.temp_size_in_bytes - ma.alias_size_in_bytes
         ) / 2**30,
     }
-    ca = compiled.cost_analysis() or {}
+    ca = xla_cost_analysis(compiled)
     rec["xla_cost"] = {k: float(v) for k, v in ca.items()
                       if k in ("flops", "bytes accessed")}
     t2 = time.time()

@@ -159,7 +159,9 @@ def _multipliers(comps: Dict[str, Computation], entry: str) -> Dict[str, float]:
 def _dot_flops(op: Op, comp: Computation) -> float:
     out_dims = shape_dims(op.type_str)
     operands = re.findall(r"\(%([\w.\-]+)[,)]", op.line)
-    ml = re.search(r"dot\(%([\w.\-]+),\s*%([\w.\-]+)\)", op.line)
+    # operands may carry type prefixes in scheduled HLO:
+    #   dot(%a, %b)  or  dot(f32[32,64]{1,0} %a, f32[64,16]{1,0} %b)
+    ml = re.search(r"dot\((?:\S+\s+)?%([\w.\-]+),\s*(?:\S+\s+)?%([\w.\-]+)\)", op.line)
     if not ml:
         return 0.0
     lhs_t = comp.symbols.get(ml.group(1))
@@ -231,6 +233,21 @@ class HloAnalysis:
             "collective_counts": self.collective_counts,
             "dots": self.dots,
         }
+
+
+def xla_cost_analysis(compiled) -> Dict[str, float]:
+    """Normalized ``compiled.cost_analysis()``.
+
+    Newer JAX returns one flat {metric: value} dict; older builds (including
+    the pinned 0.4.x) return a one-entry-per-partition list of such dicts.
+    Returns the entry dict either way ({} for an empty list).
+    """
+    ca = compiled.cost_analysis()
+    if ca is None:
+        return {}
+    if isinstance(ca, (list, tuple)):
+        return dict(ca[0]) if ca else {}
+    return dict(ca)
 
 
 def analyze_hlo(text: str) -> HloAnalysis:

@@ -27,7 +27,11 @@ def main() -> None:
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--prompt-len", type=int, default=12)
     ap.add_argument("--batch-slots", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=1,
+                    help="rotary-engine decode batch (requests served per group)")
     ap.add_argument("--cache-len", type=int, default=256)
+    ap.add_argument("--host-routing", action="store_true",
+                    help="seed-style per-layer host routing (benchmark baseline)")
     ap.add_argument("--quantization", default=None, choices=[None, "int8"])
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
@@ -53,14 +57,21 @@ def main() -> None:
         from repro.core import RotaryEngine
 
         assert cfg.has_moe, "--engine rotary requires an MoE arch"
+        b = max(1, args.batch)
         eng = RotaryEngine(
             cfg, params, rescfg or ResidencyConfig(mode="rotary", num_slots=slots),
-            rt=rt, batch=1,
+            rt=rt, batch=b, host_routing=args.host_routing,
         )
-        for i in range(args.requests):
-            prompt = rng.integers(0, cfg.vocab_size, (1, args.prompt_len)).astype(np.int32)
+        # serve requests in decode groups of --batch (device-resident hot path
+        # amortizes the per-step host interaction over all rows of the group)
+        for g0 in range(0, args.requests, b):
+            n = min(b, args.requests - g0)
+            prompt = rng.integers(
+                0, cfg.vocab_size, (b, args.prompt_len)
+            ).astype(np.int32)
             out = eng.generate(prompt, args.max_new)
-            print(f"req {i}: {out[0].tolist()}")
+            for i in range(n):
+                print(f"req {g0 + i}: {out[i].tolist()}")
         print("stats:", eng.stats.summary())
         return
 

@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.compat import get_abstract_mesh, manual_axis_names, shard_map
 from repro.config.base import ModelConfig, ShardingConfig
 from repro.models import attention as attn
 from repro.models import moe as moe_mod
@@ -60,20 +61,14 @@ class Runtime:
 
 
 def _manual_axes(am) -> set:
-    if am is None or not am.axis_names:
-        return set()
-    from jax.sharding import AxisType
-
-    return {
-        n for n, t in zip(am.axis_names, am.axis_types) if t == AxisType.Manual
-    }
+    return manual_axis_names(am)
 
 
 def _strip_manual(mesh, spec: P):
     """Drop mesh axes that are Manual in the current shard_map context from a
     PartitionSpec (they are already fixed there); returns (mesh_to_use, spec)
     or (mesh, None) if nothing shardable remains."""
-    am = jax.sharding.get_abstract_mesh()
+    am = get_abstract_mesh()
     manual = _manual_axes(am)
     if not manual:
         return mesh, spec
@@ -251,7 +246,7 @@ def _apply_block(
                         and rt.sharding.moe_impl == "epsum"):
                     # §Perf: EP decode — local experts only + one [T,D] psum,
                     # instead of all-gathering the expert store per layer
-                    am = jax.sharding.get_abstract_mesh()
+                    am = get_abstract_mesh()
                     mesh_arg = am if (am is not None and am.axis_names) else rt.mesh
                     manual = _manual_axes(am)
                     dp_eff = tuple(a for a in rt.dp_spec if a not in manual) or None
@@ -262,7 +257,7 @@ def _apply_block(
                             ep_axis=rt.sharding.tp_axis,
                         )
 
-                    y2 = jax.shard_map(
+                    y2 = shard_map(
                         epdec_fn,
                         mesh=mesh_arg,
                         in_specs=(
@@ -302,11 +297,11 @@ def _apply_block(
                     # inside another shard_map (pod-compression) the concrete
                     # mesh is rejected and manual axes may not be mentioned —
                     # use the ambient abstract mesh and strip manual axes
-                    am = jax.sharding.get_abstract_mesh()
+                    am = get_abstract_mesh()
                     mesh_arg = am if (am is not None and am.axis_names) else rt.mesh
                     manual = _manual_axes(am)
                     dp_eff = tuple(a for a in rt.dp_spec if a not in manual) or None
-                    fn = jax.shard_map(
+                    fn = shard_map(
                         epsum_fn,
                         mesh=mesh_arg,
                         in_specs=(
@@ -371,7 +366,7 @@ def _sp_attention(
     tp = rt.sharding.tp_axis
     tp_size = dict(rt.mesh.shape)[tp]
     q, k, v = attn._project_qkv(p, acfg, h, jnp.arange(s)[None, :])
-    am = jax.sharding.get_abstract_mesh()
+    am = get_abstract_mesh()
     mesh_arg = am if (am is not None and am.axis_names) else rt.mesh
     manual = _manual_axes(am)
     dp_eff = tuple(a for a in rt.dp_spec if a not in manual) or None
@@ -385,7 +380,7 @@ def _sp_attention(
             q_chunk=min(rt.q_chunk, s_loc), kv_chunk=rt.kv_chunk, q_offset=off,
         )
 
-    ctx = jax.shard_map(
+    ctx = shard_map(
         local,
         mesh=mesh_arg,
         in_specs=(

@@ -12,6 +12,14 @@ experts via slot LUT; missed experts are dropped in-step, counted, and the
 rotation corrects residency for the following step. The per-layer exact path
 (host-corrected misses) lives in ``repro.core.engine`` — this engine is the
 throughput-oriented compiled half.
+
+Device-residency hot-path details shared with the rotary engine: the stacked
+residency pytree handed to the compiled step is CACHED per segment (rebuilt
+only for segments whose slots/LUT actually rotated — see
+``RotaryResidencyManager.stacked_residency``), the per-layer LUTs are
+persistent device arrays patched in place, and the routing telemetry is pulled
+with async D2H copies issued before sampling so rotation bookkeeping overlaps
+the next tick's compute.
 """
 from __future__ import annotations
 
@@ -166,7 +174,16 @@ class ServingEngine:
                 jnp.asarray(self.lengths),
                 residency,
             )
+            if self.res_mgr is not None:
+                # start D2H copies of the routing telemetry now: they complete
+                # while the host samples, so the between-step rotation reads
+                # below never drain the device queue
+                for k, v in aux.items():
+                    if k.startswith("route_"):
+                        v.copy_to_host_async()
+                        self.stats.overlapped_pulls += 1
             logits_np = np.asarray(logits)
+            self.stats.sync_pulls += 1
             self.lengths += self.active
             toks = self.sampler(logits_np)
             now = time.perf_counter()

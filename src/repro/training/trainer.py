@@ -15,6 +15,7 @@ from typing import Any, Callable, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.compat import shard_map
 from repro.config.base import ModelConfig, RunConfig
 from repro.models.transformer import Runtime, lm_loss
 from repro.training.optimizer import adamw_init, adamw_update
@@ -94,7 +95,7 @@ def make_train_step(
             return jax.lax.pmean(loss, "pod"), grads, new_ef
 
         fe_spec = P() if frontend is None else P("pod")
-        fn = jax.shard_map(
+        fn = shard_map(
             inner,
             mesh=rt.mesh,
             in_specs=(P(), P("pod"), P("pod"), fe_spec, P("pod")),

@@ -2,6 +2,8 @@
 import jax
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")  # dev-only dep (requirements-dev.txt)
 from hypothesis import given, settings, strategies as st
 
 from repro.config import ShardingConfig, get_config

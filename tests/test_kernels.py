@@ -115,3 +115,35 @@ def test_attention_model_path_uses_pallas(rng):
     y_ref = A.attention_train(p, acfg, x, q_chunk=16, kv_chunk=16)
     y_pal = A.attention_train(p, acfg, x, use_pallas=True)
     np.testing.assert_allclose(np.asarray(y_pal), np.asarray(y_ref), atol=2e-3)
+
+
+def test_routing_parity_on_ties(rng):
+    """Host routing, the Pallas topk_gate, the lax.top_k fallback, and the
+    model's topk_route must pick IDENTICAL experts on tied logits (lowest
+    index wins) — residency accounting depends on the three agreeing."""
+    from repro.config import MoEConfig
+    from repro.core.predictor import host_topk_route
+    from repro.kernels.topk_gate import route_topk
+    from repro.models import moe as M
+
+    t, e, k = 8, 16, 4
+    logits = rng.standard_normal((t, e)).astype(np.float32)
+    # manufacture exact ties, including a fully-constant row
+    logits[:, 3] = logits[:, 7]
+    logits[:, 11] = logits[:, 7]
+    logits[0, :] = 0.5
+    logits[5, :4] = logits[5, 4:8]
+    lg = jnp.asarray(logits)
+
+    ids_host, w_host = host_topk_route(logits, k)
+    ids_auto, w_auto = route_topk(lg, k)                       # lax.top_k on CPU
+    ids_pal, w_pal = ops.topk_gate(lg, k)                      # Pallas (interpret)
+    ids_model, w_model, _ = M.topk_route(
+        lg, MoEConfig(num_experts=e, top_k=k, expert_d_ff=8)
+    )
+
+    np.testing.assert_array_equal(ids_host, np.asarray(ids_auto))
+    np.testing.assert_array_equal(ids_host, np.asarray(ids_pal))
+    np.testing.assert_array_equal(ids_host, np.asarray(ids_model))
+    np.testing.assert_allclose(w_host, np.asarray(w_auto), atol=1e-6)
+    np.testing.assert_allclose(w_host, np.asarray(w_pal), atol=1e-6)

@@ -4,6 +4,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.compat import shard_map
 from repro.config import MoEConfig
 from repro.models import moe as M
 
@@ -50,7 +51,7 @@ def test_epsum_single_axis_matches_sorted(rng):
     def fn(p_, x_):
         return M.moe_epsum_local(p_, mcfg, x_, ep_axis="model", ep_size=1)
 
-    f = jax.shard_map(
+    f = shard_map(
         fn, mesh=mesh,
         in_specs=({"router": P(None, None),
                    "experts": {kk: P("model", None, None) for kk in p["experts"]}},

@@ -7,6 +7,7 @@ import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.config import AttentionConfig, MoEConfig, ShardingConfig
 from repro.models import attention as A
 from repro.models import moe as M
@@ -60,7 +61,7 @@ def test_epsum_decode_matches_gathered(rng):
     y_ref, miss = M.moe_apply_routed(p, x, ids, weights)
     assert not bool(miss.any())
     mesh = jax.make_mesh((1, 1), ("data", "model"))
-    fn = jax.shard_map(
+    fn = shard_map(
         lambda pp, xx, ii, ww: M.moe_epsum_decode_local(
             pp, mcfg, xx, ii, ww, ep_axis="model"),
         mesh=mesh,

@@ -3,6 +3,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")  # dev-only dep (requirements-dev.txt)
 from hypothesis import given, settings, strategies as st
 
 from repro.config import ResidencyConfig, get_config

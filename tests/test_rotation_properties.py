@@ -1,6 +1,9 @@
 """Hypothesis property tests for the paper's core invariants:
 LUT bijectivity, rotation boundedness, window coverage, cyclic return."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # dev-only dep (requirements-dev.txt)
 from hypothesis import given, settings, strategies as st
 
 from repro.core.lut import SlotLUT

@@ -5,6 +5,7 @@ import numpy as np
 import pytest
 
 from conftest import params_for
+from repro.compat import shard_map
 from repro.config import RunConfig
 from repro.data import SyntheticSpec, batch_at_step
 from repro.models.transformer import Runtime
@@ -90,7 +91,7 @@ def test_int8_ef_compression_unbiased():
     from jax.sharding import PartitionSpec as P
 
     def step(ef):
-        f = jax.shard_map(
+        f = shard_map(
             lambda e: compressed_psum_pod(g_true, e, axis="pod", pod_count=1),
             mesh=mesh, in_specs=(P(),), out_specs=(P(), P()), check_vma=False,
         )
