@@ -2,7 +2,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: dev-deps tier1 ci bench
+.PHONY: dev-deps tier1 ci bench bench-decode
 
 dev-deps:          ## install test-only deps (hypothesis property coverage)
 	$(PYTHON) -m pip install -r requirements-dev.txt
@@ -12,5 +12,8 @@ tier1:             ## the ROADMAP tier-1 gate (skips hypothesis modules if absen
 
 ci: dev-deps tier1 ## "green" in one command: dev deps + full tier-1 run
 
-bench:             ## all paper-table / kernel / hot-path benchmarks
+bench:             ## all paper-table / kernel / hot-path benchmarks (emits BENCH_decode.json)
 	$(PYTHON) -m benchmarks.run
+
+bench-decode:      ## only the decode hot-path micro-benchmark (quick perf iteration)
+	$(PYTHON) -m benchmarks.decode_hot_path

@@ -1,27 +1,41 @@
-"""Decode hot-path micro-benchmark: device-resident step vs seed engine.
+"""Decode hot-path micro-benchmark: fused whole-stack step vs per-layer paths.
 
-Acceptance check for the engine rework: on the ``qwen2_moe_a2_7b`` reduced
-config the hot path must (a) produce IDENTICAL greedy tokens to the seed-style
-per-layer engine (``host_routing=True``: blocking logits pull + numpy
-softmax/top-k + per-layer LUT re-upload), (b) leave the residency accounting
-mechanism intact (every counted miss host-corrected, same number of routed
-assignments), and (c) reduce wall-clock per decode step, issuing exactly one
-queue-draining device->host transfer per token on the miss-free path.
+Three decode paths of the SAME engine are compared on the ``qwen2_moe_a2_7b``
+reduced config:
+
+* ``seed``  — seed-style per-layer walk (``host_routing=True``: blocking
+  logits pull + numpy softmax/top-k + per-layer LUT re-upload);
+* ``layer`` — PR-1 device-resident per-layer hot path (``fused_decode=False``:
+  2 jitted halves per MoE layer, async telemetry, one logits pull per token);
+* ``fused`` — ONE compiled whole-stack step per token (donated KV state,
+  on-device demand prediction, batched slot uploads).
+
+Acceptance checks: (a) greedy tokens IDENTICAL across all three paths under
+every residency mode (misses replay-corrected exactly), (b) accounting
+mechanism intact (every counted miss host-corrected; same number of routed
+assignments), (c) miss-free fused decode issues exactly ONE queue-draining
+device->host pull AND one compiled-program launch per token (O(1) dispatches
+vs the per-layer path's O(layers)), (d) the fused step beats the per-layer hot
+path on per-step wall clock (target >= 1.3x miss-free).
 
 Run directly (``python -m benchmarks.decode_hot_path``) or via
-``python -m benchmarks.run``.
+``python -m benchmarks.run`` / ``make bench-decode``; either way the row data
+lands in ``BENCH_decode.json`` so the perf trajectory accumulates across PRs.
 """
 from __future__ import annotations
 
 import dataclasses
+import json
 import time
 from typing import Dict
 
 import jax
 import numpy as np
 
+PATHS = ("seed", "layer", "fused")
 
-def _run_engine(cfg, params, mode: str, slots: int, host_routing: bool,
+
+def _run_engine(cfg, params, mode: str, slots: int, path: str,
                 prompt: np.ndarray, steps: int) -> Dict:
     from repro.config import ResidencyConfig
     from repro.core import RotaryEngine
@@ -30,20 +44,32 @@ def _run_engine(cfg, params, mode: str, slots: int, host_routing: bool,
     eng = RotaryEngine(
         cfg, params, ResidencyConfig(mode=mode, num_slots=slots),
         rt=Runtime(cache_len=max(128, prompt.shape[1] + steps + 8)),
-        batch=prompt.shape[0], host_routing=host_routing,
+        batch=prompt.shape[0],
+        host_routing=(path == "seed"),
+        fused_decode=None if path != "layer" else False,
     )
+    if path == "fused":
+        assert eng._fused_decode, "fused path unexpectedly unavailable"
     # warmup: populate the jit caches so the timed loop measures steady state
     logits = eng.prefill(prompt)
     eng.decode(logits, 2)
     pulls0 = eng.stats.sync_pulls
-    t0 = time.perf_counter()
-    out = eng.decode(eng.last_logits, steps)
-    wall = time.perf_counter() - t0
+    disp0 = eng.stats.device_dispatches
+    # best-of-3 timing: single 16-step samples are noisy on a shared host and
+    # this benchmark gates a >=1.3x acceptance; tokens from every repeat still
+    # feed the cross-path identity check
+    outs, walls = [], []
+    for _ in range(3):
+        t0 = time.perf_counter()
+        outs.append(eng.decode(eng.last_logits, steps))
+        walls.append(time.perf_counter() - t0)
+    timed = 3 * steps
     return {
         "engine": eng,
-        "tokens": out,
-        "s_per_step": wall / steps,
-        "sync_pulls_per_step": (eng.stats.sync_pulls - pulls0) / steps,
+        "tokens": np.concatenate(outs, axis=1),
+        "s_per_step": min(walls) / steps,
+        "sync_pulls_per_step": (eng.stats.sync_pulls - pulls0) / timed,
+        "dispatches_per_step": (eng.stats.device_dispatches - disp0) / timed,
     }
 
 
@@ -62,62 +88,97 @@ def run(steps: int = 16) -> Dict:
 
     rows = {}
     e = cfg.moe.num_experts
-    for label, mode, slots, host_routing in (
-        ("seed_rotary", "rotary", 6, True),      # slot-starved: misses common
-        ("hot_rotary", "rotary", 6, False),
-        ("seed_rotary_hi", "rotary", e, True),   # paper regime: prefetch covers
-        ("hot_rotary_hi", "rotary", e, False),
-        ("seed_full", "full", 0, True),
-        ("hot_full", "full", 0, False),
+    for suffix, mode, slots in (
+        ("rotary", "rotary", 6),       # slot-starved: misses common, replay paid
+        ("rotary_hi", "rotary", e),    # paper regime: prefetch covers routing
+        ("full", "full", 0),
     ):
-        rows[label] = _run_engine(cfg, params, mode, slots, host_routing,
-                                  prompt, steps)
+        for path in PATHS:
+            rows[f"{path}_{suffix}"] = _run_engine(
+                cfg, params, mode, slots, path, prompt, steps
+            )
 
-    # (a) greedy tokens identical, seed vs hot, under every residency mode
-    for pair in ("rotary", "rotary_hi", "full"):
-        np.testing.assert_array_equal(rows[f"seed_{pair}"]["tokens"],
-                                      rows[f"hot_{pair}"]["tokens"])
+    # (a) greedy tokens identical across all three paths, every residency mode
+    for suffix in ("rotary", "rotary_hi", "full"):
+        for path in ("layer", "fused"):
+            np.testing.assert_array_equal(
+                rows[f"seed_{suffix}"]["tokens"], rows[f"{path}_{suffix}"]["tokens"]
+            )
     # (b) accounting mechanism unchanged: all routed assignments counted and
-    # every miss host-corrected, in both engines
-    for label in ("seed_rotary", "hot_rotary"):
-        s = rows[label]["engine"].stats
+    # every miss host-corrected, in every path
+    for path in PATHS:
+        s = rows[f"{path}_rotary"]["engine"].stats
         assert s.hits + s.misses > 0
-        assert sum(l.host_computed for l in s.layers.values()) == s.misses, label
-    assert (rows["seed_rotary"]["engine"].stats.hits
-            + rows["seed_rotary"]["engine"].stats.misses
-            == rows["hot_rotary"]["engine"].stats.hits
-            + rows["hot_rotary"]["engine"].stats.misses)
-    # (c) miss-free hot decode: exactly ONE queue-draining pull per token
-    assert rows["hot_full"]["sync_pulls_per_step"] == 1.0, rows["hot_full"]
-    assert rows["hot_full"]["engine"].stats.misses == 0
+        assert sum(l.host_computed for l in s.layers.values()) == s.misses, path
+        assert (s.hits + s.misses
+                == rows["seed_rotary"]["engine"].stats.hits
+                + rows["seed_rotary"]["engine"].stats.misses)
+    # slot-starved fused decode actually exercised the replay machinery
+    assert rows["fused_rotary"]["engine"].stats.replayed_steps > 0
+    # (c) miss-free fused decode: ONE queue-draining pull and ONE compiled
+    # program launch per token; the per-layer hot path stays O(layers)
+    for suffix in ("full", "rotary_hi"):
+        r = rows[f"fused_{suffix}"]
+        assert r["sync_pulls_per_step"] == 1.0, r
+        assert r["dispatches_per_step"] == 1.0, r
+        assert r["engine"].stats.misses == 0
+        assert rows[f"layer_{suffix}"]["dispatches_per_step"] >= 2 * cfg.num_layers
     return rows
 
 
 def main() -> None:
     steps = 16
     rows = run(steps)
-    for label in ("seed_full", "hot_full", "seed_rotary_hi", "hot_rotary_hi",
-                  "seed_rotary", "hot_rotary"):
+    order = [f"{p}_{s}" for s in ("full", "rotary_hi", "rotary") for p in PATHS]
+    for label in order:
         r = rows[label]
-        print(f"  {label:15s} {r['s_per_step']*1e3:8.2f} ms/step  "
-              f"sync_pulls/step={r['sync_pulls_per_step']:.1f}")
-    base = rows["seed_full"]["s_per_step"]
-    hot = rows["hot_full"]["s_per_step"]
-    base_hi = rows["seed_rotary_hi"]["s_per_step"]
-    hot_hi = rows["hot_rotary_hi"]["s_per_step"]
-    print(f"  miss-free speedup (seed/hot): full {base / hot:.2f}x, "
-          f"rotary-covered {base_hi / hot_hi:.2f}x")
-    print("  (slot-starved rotary pays suffix replay per missed step; the "
-          "prefetch-covered regime is the paper's operating point)")
-    print(f"decode_hot_path,ms_per_step_hot_full,{hot*1e3:.3f}")
-    print(f"decode_hot_path,ms_per_step_seed_full,{base*1e3:.3f}")
-    print(f"decode_hot_path,speedup_full,{base / hot:.3f}")
-    print(f"decode_hot_path,speedup_rotary_covered,{base_hi / hot_hi:.3f}")
-    print(f"decode_hot_path,tokens_identical,1")
-    # the hot path must not be slower on the miss-free steady state (5%
-    # margin absorbs single-sample timing noise on a loaded host)
-    assert hot <= base * 1.05, (hot, base)
-    assert hot_hi <= base_hi * 1.05, (hot_hi, base_hi)
+        print(f"  {label:16s} {r['s_per_step']*1e3:8.2f} ms/step  "
+              f"sync_pulls/step={r['sync_pulls_per_step']:.1f}  "
+              f"dispatches/step={r['dispatches_per_step']:.1f}")
+    speedups = {}
+    for suffix in ("full", "rotary_hi"):
+        layer = rows[f"layer_{suffix}"]["s_per_step"]
+        fused = rows[f"fused_{suffix}"]["s_per_step"]
+        seed = rows[f"seed_{suffix}"]["s_per_step"]
+        speedups[suffix] = {
+            "fused_vs_layer": layer / fused,
+            "fused_vs_seed": seed / fused,
+        }
+        print(f"  miss-free {suffix}: fused vs per-layer {layer / fused:.2f}x, "
+              f"fused vs seed {seed / fused:.2f}x")
+    print("  (slot-starved rotary pays whole-suffix replay per missed step; "
+          "the prefetch-covered regime is the paper's operating point)")
+    for suffix, sp in speedups.items():
+        print(f"decode_hot_path,speedup_fused_vs_layer_{suffix},{sp['fused_vs_layer']:.3f}")
+        print(f"decode_hot_path,speedup_fused_vs_seed_{suffix},{sp['fused_vs_seed']:.3f}")
+    print(f"decode_hot_path,ms_per_step_fused_full,{rows['fused_full']['s_per_step']*1e3:.3f}")
+    print("decode_hot_path,tokens_identical,1")
+    payload = {
+        "config": "qwen2_moe_a2_7b_reduced_f32",
+        "steps_timed": steps,
+        "rows": {
+            label: {
+                "ms_per_step": rows[label]["s_per_step"] * 1e3,
+                "sync_pulls_per_step": rows[label]["sync_pulls_per_step"],
+                "dispatches_per_step": rows[label]["dispatches_per_step"],
+                "misses": int(rows[label]["engine"].stats.misses),
+                "replayed_steps": int(rows[label]["engine"].stats.replayed_steps),
+            }
+            for label in order
+        },
+        "speedups": speedups,
+        "tokens_identical": True,
+    }
+    with open("BENCH_decode.json", "w") as f:
+        json.dump(payload, f, indent=2)
+    print("  wrote BENCH_decode.json")
+    # acceptance: the fused step must beat the PR-1 per-layer hot path by
+    # >= 1.3x on the miss-free steady state (best of the two covered regimes;
+    # the other must at least not regress past timing noise)
+    best = max(sp["fused_vs_layer"] for sp in speedups.values())
+    worst = min(sp["fused_vs_layer"] for sp in speedups.values())
+    assert best >= 1.3, speedups
+    assert worst >= 1.05, speedups
 
 
 if __name__ == "__main__":

@@ -14,30 +14,46 @@ Execution per decode step (the paper's §4 loop, DESIGN.md §2 "engine path"):
 The full model weights live in host memory (numpy); only attention/static
 weights plus each layer's slot group are device-resident, mirroring Figure 1.
 
-Decode hot path (device-resident, default for non-LRU policies)
----------------------------------------------------------------
-The per-layer walk never drains the device queue: routing happens inside the
-jitted attention half, the slot LUT is a persistent device array patched in
-place on rotation, and the small per-layer host reads (hidden state for the
-demand predictor, routed ids/weights for EMA feedback) are issued as async
-copies that overlap the already-queued MoE compute. The only queue-draining
-device->host transfer per token is the final logits pull; miss masks ride the
-same materialization and are inspected afterwards.
+Fused decode hot path (default for non-LRU policies on KV-cache stacks)
+-----------------------------------------------------------------------
+One compiled whole-stack step per token: ``build_fused_decode_step`` wraps
+``tfm.decode_model``'s ``lax.scan`` over the segment stack (embed -> every
+layer -> lm head) in a single jit, consuming the manager's version-keyed
+``stacked_residency()`` pytree. The KV state is DONATED to the step
+(``donate_argnums``), so decode updates the caches in place instead of copying
+them every token. Demand prediction runs on-device inside the same step: the
+per-layer router matrices are stacked once (``predictor.next_layer_routers``)
+and every layer's next-step demand (softmaxed, token-averaged) comes back as
+one small ``demand_next`` [L, E] tensor. Routing / miss / demand telemetry is
+pulled with async copies that overlap the queued compute; the only
+queue-draining device->host transfer per token is the final logits pull, and
+the only compiled-program launch per miss-free token is the step itself
+(O(1) dispatches instead of O(layers)). The host's per-token work shrinks to
+rotation bookkeeping: EMA fold, ring transition, and batched slot uploads
+(one donated scatter per weight tensor per rotated layer).
 
-Exactness under misses is preserved by REPLAY: when the end-of-step miss masks
-show a routed expert was not resident, the step is re-executed from its saved
-input with the per-layer residency snapshots (functional jax arrays, so the
-snapshots are free) and the seed-style host GEMM correction applied between
-layers. Tokens are therefore identical to the per-layer sync path for every
-policy; on miss-free steps the predictor/rotation/stats bookkeeping is
-bit-identical too (on replayed steps the demand predictor saw the optimistic
-hiddens — the mechanism is unchanged, only its input differs).
+Exactness under misses is preserved by REPLAY: the fused step is the
+optimistic pass; when the end-of-step miss masks show a routed expert was not
+resident, the suffix from the first missed layer re-executes with the
+per-layer walk against the SAME residency the compiled step gathered from
+(rotation happens strictly after replay), anchored on the per-layer block
+inputs the step emits as telemetry (``route_x``). Re-running an attention
+block overwrites the same KV slot, so the post-step donated state is a valid
+replay substrate — which is why the fused path requires KV-cache-only block
+kinds; MoE stacks with recurrent blocks fall back to the per-layer hot walk
+below. Tokens match the per-layer sync path for every policy (on replayed
+steps the demand predictor saw the optimistic hiddens — the mechanism is
+unchanged, only its input differs).
 
-The legacy behaviour survives behind two switches: ``host_routing=True``
+Per-layer hot walk (fallback) and legacy switches
+-------------------------------------------------
+The PR-1 per-layer hot path (jitted attention half + routed MoE half per
+layer, async telemetry copies, one logits pull per token, saved-input replay)
+survives for MoE stacks with recurrent state. ``host_routing=True``
 reproduces the seed engine (blocking logits pull + numpy softmax/top-k + LUT
 re-upload per layer — kept as the benchmark baseline), and LRU residency
-automatically uses the per-layer sync walk because its reactive blocking loads
-need routed ids on host mid-step.
+automatically uses the per-layer sync walk because its reactive blocking
+loads need routed ids on host mid-step.
 """
 from __future__ import annotations
 
@@ -72,6 +88,74 @@ def _np_ffn(hw: Dict[str, np.ndarray], e: int, x: np.ndarray) -> np.ndarray:
     return h @ hw["w_down"][e].astype(np.float32)
 
 
+def moe_segments(cfg: ModelConfig) -> List[int]:
+    """Indices of segments containing an ``attn_moe`` unit — the order the
+    scan stacks per-layer ``route_*`` telemetry in (MoE-ordinal order)."""
+    return [
+        si for si, (unit, _) in enumerate(cfg.segments)
+        if any(k == "attn_moe" for k in unit)
+    ]
+
+
+def concat_route_telemetry(
+    aux: Dict[str, jax.Array], name: str, moe_segs: List[int]
+) -> np.ndarray:
+    """Per-segment ``route_{name}/seg*`` aux -> one [L, ...] host array in
+    MoE-ordinal order (shared by RotaryEngine and ServingEngine)."""
+    if len(moe_segs) == 1:
+        return np.asarray(aux[f"route_{name}/seg{moe_segs[0]}"])
+    return np.concatenate(
+        [np.asarray(aux[f"route_{name}/seg{si}"]) for si in moe_segs], axis=0
+    )
+
+
+def build_fused_decode_step(
+    cfg: ModelConfig,
+    rt: Runtime,
+    *,
+    with_demand: bool,
+    donate_state: bool = True,
+    keep_replay_anchor: bool = True,
+) -> Callable:
+    """ONE compiled whole-stack decode step, shared by ``RotaryEngine`` (fused
+    hot path) and ``ServingEngine`` (continuous-batching tick).
+
+    Returns a jitted ``fn(params, routers_next, token, state, cur_len,
+    residency) -> (logits [B, V], new_state, aux)``. ``cur_len`` may be a
+    scalar (engine) or per-row [B] (serving's ragged batches). ``state`` is
+    DONATED: the KV caches update in place instead of being copied per token.
+
+    ``aux`` carries the per-segment ``route_*`` telemetry from the scan; with
+    ``with_demand`` the DemandPredictor GEMM also runs in-graph —
+    ``aux["demand_next"]`` [L, E] holds layer (l+1)%L's softmaxed,
+    token-averaged demand computed from layer l's post-attention hidden
+    against ``routers_next`` [L, D, E] (``predictor.next_layer_routers()``) —
+    and the bulky per-layer hiddens (``route_h``) are dropped from the outputs
+    since the demand signal subsumes them. ``keep_replay_anchor=False``
+    additionally drops the per-layer block inputs (``route_x``) for callers
+    with no replay path (the serving tick), saving their device->host copy.
+    """
+    moe_segs = moe_segments(cfg)
+
+    def step(params, routers_next, token, state, cur_len, residency):
+        logits, new_state, aux = tfm.decode_model(
+            cfg, params, token, state, cur_len, rt, residency=residency
+        )
+        if with_demand:
+            h_all = jnp.concatenate(
+                [aux[f"route_h/seg{si}"] for si in moe_segs], axis=0
+            )                                                       # [L, T, D]
+            dl = jnp.einsum("ltd,lde->lte", h_all.astype(jnp.float32), routers_next)
+            aux["demand_next"] = jax.nn.softmax(dl, axis=-1).mean(axis=1)
+            for si in moe_segs:
+                del aux[f"route_h/seg{si}"]
+                if not keep_replay_anchor:
+                    del aux[f"route_x/seg{si}"]
+        return logits, new_state, aux
+
+    return jax.jit(step, donate_argnums=(3,) if donate_state else ())
+
+
 class RotaryEngine:
     def __init__(
         self,
@@ -84,7 +168,27 @@ class RotaryEngine:
         batch: int = 1,
         seed: int = 0,
         host_routing: bool = False,
+        fused_decode: Optional[bool] = None,
     ):
+        """Decode-path switches (see module docstring for the mechanisms):
+
+        * default (``host_routing=False, fused_decode=None``) — fused
+          whole-stack step when the policy and block kinds allow it, else the
+          per-layer hot walk (LRU / recurrent stacks), always exact via replay;
+        * ``fused_decode=False`` — force the per-layer device-resident hot
+          walk (kept as the fused step's benchmark comparison). Prefer this
+          for SLOT-STARVED configurations (num_slots well below the routed
+          working set): the fused step's between-step rotation gives up the
+          walk's intra-step pre-gating, and when most steps miss, the
+          whole-suffix replay makes fused decode slower than the walk — see
+          the slot-starved rows of ``benchmarks/decode_hot_path.py``. The
+          paper's operating point (prefetch covers routing) is miss-free,
+          where fused wins by construction;
+        * ``fused_decode=True``  — require the fused step (raises if the
+          policy or stack cannot support it);
+        * ``host_routing=True``  — seed-style engine: blocking per-layer
+          logits pull + numpy softmax/top-k (benchmark baseline).
+        """
         assert cfg.has_moe, "RotaryEngine requires an MoE architecture"
         self.cfg = cfg
         self.rescfg = rescfg
@@ -98,14 +202,20 @@ class RotaryEngine:
         # ---- flatten the layer stack; slice per-layer params -------------
         self.layers: List[Tuple[str, Any]] = []       # (kind, params)
         self.moe_index: List[Optional[int]] = []      # per layer: MoE ordinal
+        self._layer_pos: List[Tuple[int, int, int]] = []   # li -> (si, pi, r)
+        self._moe_pos: List[Tuple[int, int]] = []     # MoE ordinal -> (si, r)
+        self._moe_layer_li: List[int] = []            # MoE ordinal -> flat li
         self.host_experts: List[Dict[str, np.ndarray]] = []
         routers: List[np.ndarray] = []
         moe_ct = 0
         for si, (unit, reps) in enumerate(cfg.segments):
             for r in range(reps):
                 for pi, kind in enumerate(unit):
+                    self._layer_pos.append((si, pi, r))
                     p_l = jax.tree.map(lambda a, r=r: a[r], params["segments"][si][pi])
                     if kind == "attn_moe":
+                        self._moe_pos.append((si, r))
+                        self._moe_layer_li.append(len(self.layers))
                         hw = {
                             n: np.asarray(w, np.float32)
                             for n, w in p_l["moe"]["experts"].items()
@@ -142,8 +252,55 @@ class RotaryEngine:
         self._hot_decode = not host_routing and not any(
             getattr(p, "needs_sync_resolve", False) for p in self.manager.policies
         )
+        # fused whole-stack step: additionally requires replay-safe per-layer
+        # state — re-running an attention block overwrites the same KV slot,
+        # while a recurrent update is destructive (see module docstring)
+        fused_ok = self._hot_decode and all(
+            kind in ("attn_moe", "attn_mlp", "local_attn")
+            for kind, _ in self.layers
+        )
+        if fused_decode:
+            assert fused_ok, (
+                "fused decode requires device routing (no host_routing, no "
+                "LRU) and KV-cache-only block kinds"
+            )
+        self._fused_decode = fused_ok if fused_decode is None else bool(fused_decode)
         self._jits: Dict[Tuple, Callable] = {}
         self._head_jit = jax.jit(self._lm_head_impl)
+        self._cost_cache: Dict[str, Tuple[float, float]] = {}
+        if self._fused_decode:
+            # rotation happens strictly after replay in the fused path, so no
+            # residency snapshot outlives the buffers a rotation replaces
+            self.manager.donate_buffers = True
+            self._routers_next = jnp.asarray(self.predictor.next_layer_routers())
+            self._fused_step = build_fused_decode_step(
+                cfg, self.rt, with_demand=True, donate_state=True
+            )
+            self._moe_segs = moe_segments(cfg)
+            self._pull_keys = [
+                f"route_{nm}/seg{si}"
+                for si in self._moe_segs
+                for nm in ("ids", "weights", "miss")
+            ] + ["demand_next"]
+            # stacked decode params: the expert warehouse never rides along —
+            # the residency arg supplies expert weights in EVERY mode
+            segs_p = []
+            for si, (unit, reps) in enumerate(cfg.segments):
+                unit_p = []
+                for pi, kind in enumerate(unit):
+                    p_u = params["segments"][si][pi]
+                    if kind == "attn_moe" and "experts" in p_u["moe"]:
+                        p_u = dict(p_u)
+                        p_u["moe"] = {
+                            k: v for k, v in p_u["moe"].items() if k != "experts"
+                        }
+                    unit_p.append(p_u)
+                segs_p.append(tuple(unit_p))
+            self._decode_params = {
+                **{k: v for k, v in params.items() if k != "segments"},
+                "segments": tuple(segs_p),
+            }
+            self._dstate = None          # stacked decode state (built by prefill)
         self._warm_start()
 
     # ------------------------------------------------------------------
@@ -204,6 +361,7 @@ class RotaryEngine:
         return fns
 
     def _embed(self, tokens: jax.Array) -> jax.Array:
+        self.stats.device_dispatches += 1
         return jnp.take(self.embed_params["embed"], tokens, axis=0)
 
     def _lm_head_impl(self, embed_params, h: jax.Array) -> jax.Array:
@@ -217,6 +375,7 @@ class RotaryEngine:
         return hn @ head
 
     def _lm_head(self, h: jax.Array) -> jax.Array:
+        self.stats.device_dispatches += 1
         return self._head_jit(self.embed_params, h)
 
     # ------------------------------------------------------------------
@@ -264,6 +423,7 @@ class RotaryEngine:
                     attn_half, moe_half = self._block_fn(kind, mode, routed=False)
                     x_mid, h2, logits_dev, new_state = attn_half(p_l, x, state, cur)
                     self.stats.sync_pulls += 1
+                    self.stats.device_dispatches += 1
                     logits = np.asarray(logits_dev, np.float32)
                     ids, weights = host_topk_route(
                         logits, m.top_k, normalize=m.norm_topk_prob
@@ -272,6 +432,7 @@ class RotaryEngine:
                     attn_half, moe_half = self._block_fn(kind, mode, routed=True)
                     x_mid, h2, ids_dev, w_dev, new_state = attn_half(p_l, x, state, cur)
                     self.stats.sync_pulls += 1
+                    self.stats.device_dispatches += 1
                     ids = np.asarray(ids_dev)
                     weights = np.asarray(w_dev)
                 self.state[li] = new_state
@@ -284,6 +445,7 @@ class RotaryEngine:
                     jnp.asarray(ids), jnp.asarray(weights),
                     slots_tree, lut_dev,
                 )
+                self.stats.device_dispatches += 1
                 # --- host correction for misses ---------------------------
                 if miss.any() and self.rescfg.host_compute_misses:
                     x = self._host_correct(x, moe_li, h2, ids, weights, miss)
@@ -299,6 +461,7 @@ class RotaryEngine:
             else:
                 (block,) = self._block_fn(kind, mode)
                 x, new_state = block(p_l, x, state if state else {}, cur)
+                self.stats.device_dispatches += 1
                 self.state[li] = new_state
                 flops, byts = self._layer_cost(kind, x.shape, cur_len, hits=0)
                 clock.compute(self.cost.compute_s(flops, byts), needs_dma=False)
@@ -330,6 +493,7 @@ class RotaryEngine:
                 slots_tree = self.manager.stores[moe_li].as_pytree()
                 lut_dev = self.manager.device_lut(moe_li)
                 x, miss_dev = moe_half(p_l, x_mid, h2, ids_dev, w_dev, slots_tree, lut_dev)
+                self.stats.device_dispatches += 2
                 self.state[li] = new_state
                 # async D2H copies: by the time the host consumes these, the
                 # MoE half + next layer's slot uploads are already queued, so
@@ -351,6 +515,7 @@ class RotaryEngine:
             else:
                 (block,) = self._block_fn(kind, "decode")
                 x, new_state = block(p_l, x, state if state else {}, cur)
+                self.stats.device_dispatches += 1
                 self.state[li] = new_state
                 order.append(("plain", li, kind, x.shape))
         logits_dev = self._lm_head(x[:, -1:])[:, 0]
@@ -441,23 +606,182 @@ class RotaryEngine:
         self.stats.sync_pulls += 1
         return logits
 
-    def _layer_cost(self, kind: str, xshape, cur_len: int, hits: int) -> Tuple[float, float]:
-        """(flops, bytes) estimate of one layer at current shapes (modeled clock)."""
-        from repro.models.params import _block_params
+    # ------------------------------------------------------------------
+    # fused whole-stack decode (ONE compiled step per token)
+    # ------------------------------------------------------------------
+    def _stack_state(self, flat: List[Any]) -> Any:
+        """Per-layer state list -> the stacked pytree ``decode_model`` scans
+        (tuple over segments of tuples over unit positions, leading dim =
+        reps). One-time cost after prefill; decode then threads the stacked
+        state through the donated fused step without ever re-stacking."""
+        segs: List[Tuple] = []
+        base = 0
+        for unit, reps in self.cfg.segments:
+            unit_states = []
+            for pi in range(len(unit)):
+                per_rep = [
+                    flat[base + r * len(unit) + pi] or {} for r in range(reps)
+                ]
+                unit_states.append(
+                    jax.tree.map(lambda *xs: jnp.stack(xs), *per_rep)
+                )
+            segs.append(tuple(unit_states))
+            base += reps * len(unit)
+        return tuple(segs)
 
+    def _layer_state(self, li: int) -> Any:
+        si, pi, r = self._layer_pos[li]
+        return jax.tree.map(lambda a: a[r], self._dstate[si][pi])
+
+    def _set_layer_state(self, li: int, new_state: Any) -> None:
+        si, pi, r = self._layer_pos[li]
+        segs = list(self._dstate)
+        unit = list(segs[si])
+        unit[pi] = jax.tree.map(
+            lambda full, s: full.at[r].set(s), unit[pi], new_state
+        )
+        segs[si] = tuple(unit)
+        self._dstate = tuple(segs)
+
+    def _decode_step_fused(self, tok: np.ndarray) -> np.ndarray:
+        """One decode step = ONE compiled program launch (plus the rotation's
+        batched uploads). Returns host logits [B, V]; see module docstring."""
+        cur_len = self.cur_len
+        residency = self.manager.stacked_residency()
+        logits_dev, self._dstate, aux = self._fused_step(
+            self._decode_params, self._routers_next, jnp.asarray(tok),
+            self._dstate, jnp.int32(cur_len), residency,
+        )
+        self.stats.device_dispatches += 1
+        # async D2H: these complete while the logits pull below drains the
+        # queue, so the rotation bookkeeping reads ready host buffers
+        for k in self._pull_keys:
+            aux[k].copy_to_host_async()
+        self.stats.overlapped_pulls += len(self._pull_keys)
+        logits = np.asarray(logits_dev)        # THE one queue-draining pull
+        self.stats.sync_pulls += 1
+        ids = concat_route_telemetry(aux, "ids", self._moe_segs)      # [L, T, k]
+        weights = concat_route_telemetry(aux, "weights", self._moe_segs)
+        miss = concat_route_telemetry(aux, "miss", self._moe_segs)
+        demand_next = np.asarray(aux["demand_next"])   # [L, E]
+        missed = np.flatnonzero(miss.reshape(miss.shape[0], -1).any(axis=1))
+        start_moe = (
+            int(missed[0])
+            if (missed.size and self.rescfg.host_compute_misses)
+            else self.num_moe_layers
+        )
+        start_li = (
+            self._moe_layer_li[start_moe]
+            if start_moe < self.num_moe_layers
+            else len(self.layers)
+        )
+        # stats + modeled clock for the authoritative prefix in seed order
+        # (layers before the first miss are exact as computed; the replay
+        # charges the suffix itself)
+        xshape = (self.batch, 1, self.cfg.d_model)
+        for li, (kind, _) in enumerate(self.layers):
+            if li >= start_li:
+                break
+            moe_li = self.moe_index[li]
+            if moe_li is not None:
+                self.manager.record_routing(moe_li, ids[moe_li], miss[moe_li])
+                hits = int((~miss[moe_li]).sum())
+                flops, byts = self._layer_cost(kind, xshape, cur_len, hits=hits)
+                self.clock.compute(self.cost.compute_s(flops, byts))
+            else:
+                flops, byts = self._layer_cost(kind, xshape, cur_len, hits=0)
+                self.clock.compute(self.cost.compute_s(flops, byts), needs_dma=False)
+        if start_li < len(self.layers):
+            logits = self._replay_fused(aux, start_moe, start_li, cur_len)
+        # between-step rotation: the pre-gating GEMM already ran on device;
+        # host work is the EMA fold, the ring transition, and ONE batched
+        # (donated) scatter per weight tensor per rotated layer
+        self.manager.rotate_from_telemetry(
+            self.predictor, ids, weights, miss, demand_next,
+            clock=self.clock, record=False,
+        )
+        return logits
+
+    def _replay_fused(
+        self, aux: Dict[str, jax.Array], start_moe: int, start_li: int, cur_len: int
+    ) -> np.ndarray:
+        """Exact re-execution of a fused-step SUFFIX after an observed miss.
+
+        Same contract as ``_replay_step``: layers before ``start_li`` saw
+        exactly the inputs/residency the sync walk would have used, so their
+        outputs and KV writes stand. The suffix re-executes with the per-layer
+        walk from the fused pass's saved block input (``route_x`` telemetry)
+        against the SAME residency the compiled step gathered from — rotation
+        runs strictly after this replay. Re-running an attention block
+        overwrites the very KV slot the optimistic pass wrote, so the
+        post-step donated state is a valid replay substrate.
+        """
+        si0, r0 = self._moe_pos[start_moe]
+        x = aux[f"route_x/seg{si0}"][r0].reshape(self.batch, 1, -1)
+        self.stats.device_dispatches += 1             # device-side slice
+        cur = jnp.int32(cur_len)
+        clock = self.clock
+        for li in range(start_li, len(self.layers)):
+            kind, p_l = self.layers[li]
+            state = self._layer_state(li)
+            if kind == "attn_moe":
+                moe_li = self.moe_index[li]
+                attn_half, moe_half = self._block_fn(kind, "decode", routed=True)
+                x_mid, h2, ids_dev, w_dev, new_state = attn_half(p_l, x, state, cur)
+                slots_tree = self.manager.stores[moe_li].as_pytree()
+                lut_dev = self.manager.device_lut(moe_li)
+                x, miss_dev = moe_half(
+                    p_l, x_mid, h2, ids_dev, w_dev, slots_tree, lut_dev
+                )
+                self.stats.device_dispatches += 2
+                ids = np.asarray(ids_dev)
+                weights = np.asarray(w_dev)
+                miss = np.asarray(miss_dev)
+                self.stats.sync_pulls += 1
+                self.manager.record_routing(moe_li, ids, miss)
+                if miss.any() and self.rescfg.host_compute_misses:
+                    x = self._host_correct(x, moe_li, h2, ids, weights, miss)
+                flops, byts = self._layer_cost(
+                    kind, x.shape, cur_len, hits=int((~miss).sum())
+                )
+                clock.compute(self.cost.compute_s(flops, byts))
+            else:
+                (block,) = self._block_fn(kind, "decode")
+                x, new_state = block(p_l, x, state if state else {}, cur)
+                self.stats.device_dispatches += 1
+                flops, byts = self._layer_cost(kind, x.shape, cur_len, hits=0)
+                clock.compute(self.cost.compute_s(flops, byts), needs_dma=False)
+            self._set_layer_state(li, new_state)
+        logits = np.asarray(self._lm_head(x[:, -1:])[:, 0])
+        self.stats.sync_pulls += 1
+        self.stats.replayed_steps += 1
+        return logits
+
+    def _layer_cost(self, kind: str, xshape, cur_len: int, hits: int) -> Tuple[float, float]:
+        """(flops, bytes) estimate of one layer at current shapes (modeled clock).
+
+        The per-kind static parameter counts are computed once and cached —
+        this runs per layer per decode step on the host and must stay off the
+        critical path.
+        """
         cfg = self.cfg
+        cached = self._cost_cache.get(kind)
+        if cached is None:
+            from repro.models.params import _block_params
+
+            n_static = float(_block_params(cfg, kind, active_only=True))
+            per_hit = 0.0
+            if kind == "attn_moe":
+                m = cfg.moe
+                mats = 3 if cfg.mlp == "swiglu" else 2
+                n_static -= m.top_k * mats * cfg.d_model * m.expert_d_ff
+                per_hit = float(mats * cfg.d_model * m.expert_d_ff)
+            cached = (n_static, per_hit)
+            self._cost_cache[kind] = cached
+        n_static, per_hit = cached
         tokens = int(np.prod(xshape[:-1]))
-        n_static = _block_params(cfg, kind, active_only=True)
-        if kind == "attn_moe":
-            m = cfg.moe
-            mats = 3 if cfg.mlp == "swiglu" else 2
-            n_static -= m.top_k * mats * cfg.d_model * m.expert_d_ff
-            expert_flops = 2.0 * hits * mats * cfg.d_model * m.expert_d_ff
-            expert_bytes = hits * mats * cfg.d_model * m.expert_d_ff * 2
-        else:
-            expert_flops = expert_bytes = 0.0
-        flops = 2.0 * tokens * n_static + expert_flops
-        byts = 2.0 * n_static + expert_bytes
+        flops = 2.0 * tokens * n_static + 2.0 * hits * per_hit
+        byts = 2.0 * n_static + 2.0 * hits * per_hit
         if cfg.uses_kv_cache and kind in ("attn_mlp", "attn_moe", "local_attn"):
             a = cfg.attention
             ctx = min(cur_len + 1, self.rt.cache_len)
@@ -488,6 +812,11 @@ class RotaryEngine:
         self.stats.wall_s += time.perf_counter() - t0
         self.cur_len = s
         self.stats.tokens += b * s
+        if self._fused_decode:
+            # one-time: stack the per-layer states into the scan layout the
+            # fused step consumes (and donates back, updated in place)
+            self._dstate = self._stack_state(self.state)
+            self.state = None
         return np.asarray(logits)
 
     def decode(
@@ -514,7 +843,9 @@ class RotaryEngine:
                     [rng.choice(p.shape[-1], p=row) for row in p], np.int32
                 )
             out[:, i] = tok
-            if self._hot_decode:
+            if self._fused_decode:
+                logits = self._decode_step_fused(tok)
+            elif self._hot_decode:
                 logits = self._decode_step_hot(tok)
             else:
                 x = self._embed(jnp.asarray(tok)[:, None])

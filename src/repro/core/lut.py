@@ -48,6 +48,12 @@ class SlotLUT:
         """Device-uploadable [E] int32 (missing experts -> miss sentinel)."""
         return self.e2s.copy()
 
+    def dirty_count(self) -> int:
+        """Number of e2s entries mutated since the last ``take_dirty`` —
+        lets the residency manager pick patch vs full re-upload without
+        consuming (or materializing) the dirty set."""
+        return len(self._dirty)
+
     def take_dirty(self) -> np.ndarray:
         """Expert ids mutated since the previous call (sorted, then cleared)."""
         idx = np.fromiter(sorted(self._dirty), np.int64, len(self._dirty))

@@ -59,9 +59,23 @@ class DemandPredictor:
         if h is None:
             return self.smoothed[layer].copy()
         logits = np.asarray(h, np.float32) @ self.routers[layer]      # [B, E]
-        demand = softmax(logits, axis=-1).mean(axis=0).astype(np.float64)
+        return self.update(layer, softmax(logits, axis=-1).mean(axis=0))
+
+    def update(self, layer: int, demand: np.ndarray) -> np.ndarray:
+        """EMA-fold an externally computed demand sample [E] (the fused decode
+        step's on-device router GEMM) and return the smoothed demand — the
+        host half of ``predict`` when the GEMM already ran on device."""
+        demand = np.asarray(demand, np.float64)
         self.smoothed[layer] = self.ema * self.smoothed[layer] + (1 - self.ema) * demand
         return self.smoothed[layer].copy()
+
+    def next_layer_routers(self) -> np.ndarray:
+        """Stacked router matrices [L, D, E] with R[l] = router of layer
+        (l+1) % L, so ``softmax(h_l @ R[l])`` is layer l+1's demand predicted
+        from layer l's hidden — uploaded once and consumed inside the fused
+        decode step (pre-gating moved on-device)."""
+        n = self.num_layers
+        return np.stack([self.routers[(l + 1) % n] for l in range(n)])
 
     def observe(self, layer: int, ids: np.ndarray, weights: np.ndarray) -> None:
         """Fold actually-routed experts back into the smoothed demand (feedback

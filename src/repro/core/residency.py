@@ -17,7 +17,7 @@ import numpy as np
 
 from repro.config.base import ModelConfig, ResidencyConfig
 from repro.core.policies import ResidencyPolicy, make_policy
-from repro.core.slots import SlotStore
+from repro.core.slots import SlotStore, scatter_set, scatter_set_donated
 from repro.core.stats import EngineStats
 from repro.core.transfer import CostModel, TransferClock
 
@@ -142,6 +142,10 @@ class RotaryResidencyManager:
         if rescfg.mode == "full":
             slots = m.num_experts
         self.num_slots = slots
+        # batched uploads may donate the replaced device buffers; engines whose
+        # decode path never holds residency snapshots across a rotation (the
+        # fused whole-stack step, the serving tick) flip this on
+        self.donate_buffers = False
         dtype = jnp.dtype(cfg.dtype)
         self.stores: List[SlotStore] = []
         self.policies: List[ResidencyPolicy] = []
@@ -149,10 +153,9 @@ class RotaryResidencyManager:
             shapes = {name: tuple(w.shape[1:]) for name, w in hw.items()}
             store = SlotStore(slots, shapes, dtype, rescfg.quantization)
             policy = make_policy(rescfg.mode, m.num_experts, slots, rescfg, seed=seed + li)
-            # full policy: preload everything (identity LUT)
+            # full policy: preload everything (identity LUT) in one batch
             if rescfg.mode == "full":
-                for e in range(m.num_experts):
-                    store.write(e, {n: hw[n][e] for n in hw})
+                store.write_batch(list(range(m.num_experts)), dict(hw))
             self.stores.append(store)
             self.policies.append(policy)
         # persistent device-resident LUT per layer (patched incrementally on
@@ -180,11 +183,21 @@ class RotaryResidencyManager:
         return moved
 
     def _execute_loads(self, layer: int, loads: List[Tuple[int, int]]) -> int:
+        """Upload ``loads`` as ONE stacked scatter per weight tensor (not one
+        dispatch per expert); old buffers are donated when the owning engine
+        marked it safe."""
+        if not loads:
+            return 0
         hw = self.host_experts[layer]
         store = self.stores[layer]
-        moved = 0
-        for expert, slot in loads:
-            moved += store.write(slot, {n: hw[n][expert] for n in hw})
+        experts = np.asarray([e for e, _ in loads], np.int64)
+        slots = [s for _, s in loads]
+        before = store.dispatches
+        moved = store.write_batch(
+            slots, {n: hw[n][experts] for n in hw}, donate=self.donate_buffers
+        )
+        self.stats.upload_dispatches += store.dispatches - before
+        self.stats.device_dispatches += store.dispatches - before
         return moved
 
     def resolve(
@@ -229,15 +242,23 @@ class RotaryResidencyManager:
         if cached is None:
             lut.take_dirty()
             cached = jnp.asarray(lut.as_array())
-        else:
-            idx = lut.take_dirty()
-            if idx.size:
-                if idx.size > lut.num_experts // 2:
-                    cached = jnp.asarray(lut.as_array())
-                else:
-                    cached = cached.at[jnp.asarray(idx, jnp.int32)].set(
-                        jnp.asarray(lut.e2s[idx])
-                    )
+        elif lut.dirty_count():
+            old = cached
+            if lut.dirty_count() > lut.num_experts // 2:
+                # full re-upload beats a near-total scatter; the replaced
+                # device array is dropped eagerly instead of waiting for GC
+                lut.take_dirty()
+                cached = jnp.asarray(lut.as_array())
+                if self.donate_buffers:
+                    old.delete()
+            else:
+                idx = lut.take_dirty()
+                patch = scatter_set_donated if self.donate_buffers else scatter_set
+                cached = patch(
+                    old, jnp.asarray(idx, jnp.int32), jnp.asarray(lut.e2s[idx])
+                )
+                self.stats.lut_patch_dispatches += 1
+                self.stats.device_dispatches += 1
         self._lut_dev[layer] = cached
         return cached
 
@@ -249,6 +270,36 @@ class RotaryResidencyManager:
         ls = self.stats.layer(layer)
         ls.hits += int((~miss).sum())
         ls.misses += int(miss.sum())
+
+    def rotate_from_telemetry(
+        self,
+        predictor,                       # DemandPredictor
+        ids: np.ndarray,                 # [L, T, k] routed expert ids
+        weights: np.ndarray,             # [L, T, k] routing weights
+        miss: np.ndarray,                # [L, T, k] device-classified misses
+        demand_next: np.ndarray,         # [L, E]; row l = demand of layer (l+1)%L
+        clock: Optional[TransferClock] = None,
+        record: bool = True,
+    ) -> None:
+        """Between-step rotation + predictor feedback from ONE compiled step's
+        telemetry — the host-side bookkeeping shared by the fused RotaryEngine
+        step and the ServingEngine tick.
+
+        ``demand_next`` is the on-device pre-gating signal (layer l's hidden
+        through layer l+1's router, already softmaxed and token-averaged); the
+        host only folds it into the EMA and runs the ring transition. With
+        ``record`` the device-classified hit/miss masks are also accounted
+        (the fused engine's replay path records its own authoritative masks
+        and passes ``record=False``).
+        """
+        n = len(self.policies)
+        for l in range(n):
+            if record:
+                self.record_routing(l, ids[l], miss[l])
+            predictor.observe(l, ids[l], weights[l])
+        for l in range(n):
+            nxt = (l + 1) % n
+            self.prepare_layer(nxt, predictor.update(nxt, demand_next[l]), clock)
 
     # ------------------------------------------------------------------
     def layer_residency(self, layer: int) -> Dict[str, Any]:

@@ -97,7 +97,7 @@ class RotaryRing:
                 if self._window_score(snap_pos, demand) > here + 1e-9:
                     best_snap = (c, snap_pos)
         if best_snap is not None and best_snap[1] != self.pos:
-            delta = self._ring_delta(self.pos, best_snap[1])
+            delta = self._ring_delta(self.pos, best_snap[1], self.num_experts)
             self.pos = best_snap[1]
             return RotationDecision(delta=delta, reverse_jump=True, window=self.window)
 
@@ -127,8 +127,17 @@ class RotaryRing:
         return RotationDecision(delta=best_delta, reverse_jump=False, window=self.window)
 
     @staticmethod
-    def _ring_delta(src: int, dst: int) -> int:
-        return dst - src
+    def _ring_delta(src: int, dst: int, num_experts: int) -> int:
+        """Minimal signed rotation taking ``src`` to ``dst`` on the ring.
+
+        A jump across the ring seam (e.g. pos 0 -> pos E-1) is one REVERSE
+        step, not E-1 forward steps; ties at exactly half the ring prefer the
+        forward direction.
+        """
+        d = (dst - src) % num_experts
+        if d > num_experts // 2:
+            d -= num_experts
+        return d
 
     def _rering(self) -> None:
         """Re-sort the ring by demand EMA, keeping the current window's experts

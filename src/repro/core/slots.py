@@ -12,7 +12,8 @@ after the take (the Pallas ``moe_gmm`` kernel dequantizes in VMEM on real TPUs).
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+import functools
+from typing import Any, Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -27,6 +28,27 @@ def quantize_int8(w: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
     scale = (amax / 127.0 + 1e-12).astype(np.float32)
     q = np.clip(np.round(w / scale), -127, 127).astype(np.int8)
     return q, scale.reshape(w.shape[-1])
+
+
+def quantize_int8_batch(w: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """``quantize_int8`` over a leading expert axis: w [N, .., F] ->
+    (q int8 [N, .., F], scale f32 [N, F]) with per-expert scales identical to
+    quantizing each expert alone (the batched upload path must be bit-equal to
+    the one-expert path)."""
+    amax = np.max(np.abs(w), axis=tuple(range(1, w.ndim - 1)), keepdims=True)
+    scale = (amax / 127.0 + 1e-12).astype(np.float32)
+    q = np.clip(np.round(w / scale), -127, 127).astype(np.int8)
+    return q, scale.reshape(w.shape[0], w.shape[-1])
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def scatter_set_donated(buf: jax.Array, idx: jax.Array, vals: jax.Array) -> jax.Array:
+    return buf.at[idx].set(vals)
+
+
+@jax.jit
+def scatter_set(buf: jax.Array, idx: jax.Array, vals: jax.Array) -> jax.Array:
+    return buf.at[idx].set(vals)
 
 
 def dequantize_int8(q: jax.Array, scale: jax.Array, dtype: Any) -> jax.Array:
@@ -47,6 +69,8 @@ class SlotStore:
         self.dtype = jnp.dtype(dtype)
         self.quantization = quantization
         self.version = 0                # bumped per write (stacked-cache key)
+        self.dispatches = 0             # scatter launches issued (batched: one
+                                        # per weight tensor per rotation)
         store_dtype = jnp.int8 if quantization == "int8" else self.dtype
         self.buffers: Params = {
             name: jnp.zeros((num_slots + 1,) + shape, store_dtype)
@@ -75,20 +99,47 @@ class SlotStore:
 
     def write(self, slot: int, expert_weights: Dict[str, np.ndarray]) -> int:
         """Upload one expert into ``slot``. Returns bytes moved host->device."""
-        assert 0 <= slot < self.num_slots, f"slot {slot} out of range"
+        return self.write_batch(
+            [slot], {n: np.asarray(w)[None] for n, w in expert_weights.items()}
+        )
+
+    def write_batch(
+        self,
+        slots: Sequence[int],
+        stacked_weights: Dict[str, np.ndarray],   # name -> [N, ...] host array
+        *,
+        donate: bool = False,
+    ) -> int:
+        """Upload N experts in ONE stacked scatter per weight tensor.
+
+        A rotation that moves N experts costs one ``.at[idx].set`` dispatch per
+        tensor (3 for swiglu) instead of N per tensor; ``donate`` additionally
+        donates the old device buffer to the scatter so steady-state rotation
+        allocates nothing (safe only when no snapshot of the buffer is live —
+        the fused decode path rotates strictly after replay).
+        Returns bytes moved host->device.
+        """
+        if not len(slots):
+            return 0
+        for slot in slots:
+            assert 0 <= slot < self.num_slots, f"slot {slot} out of range"
+        scatter = scatter_set_donated if donate else scatter_set
+        idx = jnp.asarray(np.asarray(slots, np.int32))
         self.version += 1
         moved = 0
-        for name, w in expert_weights.items():
+        for name, w in stacked_weights.items():
             w = np.asarray(w)
             if self.quantization == "int8":
-                q, scale = quantize_int8(w.astype(np.float32))
-                self.buffers[name] = self.buffers[name].at[slot].set(q)
-                self.scales[name] = self.scales[name].at[slot].set(scale)
+                q, scale = quantize_int8_batch(w.astype(np.float32))
+                self.buffers[name] = scatter(self.buffers[name], idx, jnp.asarray(q))
+                self.scales[name] = scatter(self.scales[name], idx, jnp.asarray(scale))
+                self.dispatches += 2
                 moved += q.nbytes + scale.nbytes
             else:
-                self.buffers[name] = self.buffers[name].at[slot].set(
-                    jnp.asarray(w, self.dtype)
+                self.buffers[name] = scatter(
+                    self.buffers[name], idx, jnp.asarray(w, self.dtype)
                 )
+                self.dispatches += 1
                 moved += int(np.prod(w.shape)) * self.dtype.itemsize
         return moved
 

@@ -38,6 +38,13 @@ class EngineStats:
     sync_pulls: int = 0             # queue-draining device->host reads (the
                                     # hot decode path does exactly 1 per token)
     overlapped_pulls: int = 0       # pipelined reads that overlap queued compute
+    device_dispatches: int = 0      # host->device program launches the engine
+                                    # issues (fused decode: 1 per miss-free token)
+    lut_patch_dispatches: int = 0   # incremental LUT patch launches (subset of
+                                    # device_dispatches; <=1 per layer per step)
+    upload_dispatches: int = 0      # slot-upload scatter launches (batched: one
+                                    # per weight tensor per rotation, not per expert)
+    replayed_steps: int = 0         # decode steps suffix-replayed after a miss
 
     def layer(self, idx: int) -> LayerStats:
         return self.layers.setdefault(idx, LayerStats())
@@ -80,4 +87,8 @@ class EngineStats:
             "stall_s": round(self.stall_s, 4),
             "sync_pulls": self.sync_pulls,
             "overlapped_pulls": self.overlapped_pulls,
+            "device_dispatches": self.device_dispatches,
+            "lut_patch_dispatches": self.lut_patch_dispatches,
+            "upload_dispatches": self.upload_dispatches,
+            "replayed_steps": self.replayed_steps,
         }

@@ -198,6 +198,7 @@ def _apply_block(
     new_state = state
     if kind in ("attn_mlp", "attn_moe", "local_attn"):
         acfg = cfg.attention
+        x_in = x                        # block input (decode telemetry: replay anchor)
         h = apply_norm(cfg.norm, p["ln1"], x)
         # §Perf iteration 3b: when head-TP is unavailable (heads don't divide
         # the model axis) shard the QUERY positions over it instead (SP) —
@@ -275,11 +276,13 @@ def _apply_block(
                     )
                 aux["moe_miss"] = miss.sum()
                 # routing telemetry for the rotary engine/predictor ("route_*"
-                # keys are stacked per layer by the scan, not summed)
+                # keys are stacked per layer by the scan, not summed);
+                # route_x anchors the engine's suffix replay at this block
                 aux["route_ids"] = ids
                 aux["route_weights"] = weights
                 aux["route_miss"] = miss
                 aux["route_h"] = h2d
+                aux["route_x"] = x_in.reshape(-1, d)
                 y2 = y2.reshape(b, s, d)
             else:
                 impl = rt.sharding.moe_impl

@@ -13,13 +13,15 @@ rotation corrects residency for the following step. The per-layer exact path
 (host-corrected misses) lives in ``repro.core.engine`` — this engine is the
 throughput-oriented compiled half.
 
-Device-residency hot-path details shared with the rotary engine: the stacked
-residency pytree handed to the compiled step is CACHED per segment (rebuilt
-only for segments whose slots/LUT actually rotated — see
-``RotaryResidencyManager.stacked_residency``), the per-layer LUTs are
-persistent device arrays patched in place, and the routing telemetry is pulled
-with async D2H copies issued before sampling so rotation bookkeeping overlaps
-the next tick's compute.
+Device-residency hot-path details shared with the rotary engine: the compiled
+step IS the engine's fused whole-stack step (``build_fused_decode_step``) —
+KV state donated, demand prediction on-device — the stacked residency pytree
+handed to it is CACHED per segment (rebuilt only for segments whose slots/LUT
+actually rotated — see ``RotaryResidencyManager.stacked_residency``), the
+per-layer LUTs are persistent device arrays patched in place, the routing /
+demand telemetry is pulled with async D2H copies issued before sampling, and
+the between-step rotation is the manager's shared ``rotate_from_telemetry``
+(one batched donated scatter per weight tensor per rotated layer).
 """
 from __future__ import annotations
 
@@ -32,6 +34,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.config.base import ModelConfig, ResidencyConfig
+from repro.core.engine import (
+    build_fused_decode_step,
+    concat_route_telemetry,
+    moe_segments,
+)
 from repro.core.predictor import DemandPredictor
 from repro.core.residency import RotaryResidencyManager
 from repro.core.stats import EngineStats
@@ -94,15 +101,17 @@ class ServingEngine:
                 self.res_mgr.prepare_layer(li, self.predictor.smoothed[li])
 
         # --- compiled steps ---------------------------------------------
-        res_arg = self.res_mgr.stacked_residency() if self.res_mgr else None
-
-        def decode_step(params, token, state, lengths, residency):
-            return tfm.decode_model(
-                cfg, params, token, state, lengths, self.rt, residency=residency
-            )
-
-        self._decode = jax.jit(decode_step)
-        self._res_example = res_arg
+        # the tick shares the rotary engine's fused whole-stack step: KV state
+        # donated (no per-tick cache copy), per-layer demand GEMM in-graph
+        self._routers_next = None
+        if self.res_mgr is not None:
+            self.res_mgr.donate_buffers = True       # no snapshots span a tick
+            self._routers_next = jnp.asarray(self.predictor.next_layer_routers())
+        self._decode = build_fused_decode_step(
+            cfg, self.rt, with_demand=self.res_mgr is not None, donate_state=True,
+            keep_replay_anchor=False,     # no replay path: drop route_x outputs
+        )
+        self._moe_segs = moe_segments(cfg)
         self._prefill_cache: Dict[int, Any] = {}
 
     # ------------------------------------------------------------------
@@ -117,7 +126,8 @@ class ServingEngine:
         bucket = s if has_recurrence else min(
             max(16, 1 << (s - 1).bit_length()), self.rt.cache_len
         )
-        if bucket not in self._prefill_cache:
+        cold = bucket not in self._prefill_cache
+        if cold:
             def fn(params, tokens, last):
                 return tfm.prefill_model(
                     self.cfg, params, tokens, self.rt, last_index=last
@@ -126,9 +136,16 @@ class ServingEngine:
             self._prefill_cache[bucket] = jax.jit(fn)
         padded = np.zeros((1, bucket), np.int32)
         padded[0, :s] = prompt
+        t0 = time.perf_counter()
         logits, state = self._prefill_cache[bucket](
             self.params, jnp.asarray(padded), jnp.asarray([s - 1], jnp.int32)
         )
+        logits.block_until_ready()
+        dt = time.perf_counter() - t0
+        if not cold and dt > 0:
+            # steady-state sample only — a cold bucket's wall time is
+            # dominated by trace/compile and would poison the admission EMA
+            self.scheduler.observe_prefill_rate(s / dt)
         return logits, state, s
 
     def _splice_row(self, slot: int, row_state: Any) -> None:
@@ -169,17 +186,19 @@ class ServingEngine:
                 residency = self.res_mgr.stacked_residency()
             logits, self.state, aux = self._decode(
                 self.params,
+                self._routers_next,
                 jnp.asarray(self.next_token),
                 self.state,
                 jnp.asarray(self.lengths),
                 residency,
             )
+            self.stats.device_dispatches += 1
             if self.res_mgr is not None:
-                # start D2H copies of the routing telemetry now: they complete
-                # while the host samples, so the between-step rotation reads
-                # below never drain the device queue
+                # start D2H copies of the routing/demand telemetry now: they
+                # complete while the host samples, so the between-step rotation
+                # reads below never drain the device queue
                 for k, v in aux.items():
-                    if k.startswith("route_"):
+                    if k.startswith("route_") or k == "demand_next":
                         v.copy_to_host_async()
                         self.stats.overlapped_pulls += 1
             logits_np = np.asarray(logits)
@@ -204,26 +223,13 @@ class ServingEngine:
 
     # ------------------------------------------------------------------
     def _rotate_from_aux(self, aux: Dict[str, jax.Array]) -> None:
-        """Between-step rotation from routing telemetry (compiled path)."""
-        li = 0
-        for si, (unit, reps) in enumerate(self.cfg.segments):
-            if not any(k == "attn_moe" for k in unit):
-                continue
-            ids = np.asarray(aux[f"route_ids/seg{si}"])          # [reps, T, k]
-            w = np.asarray(aux[f"route_weights/seg{si}"])
-            miss = np.asarray(aux[f"route_miss/seg{si}"])
-            h = np.asarray(aux[f"route_h/seg{si}"])              # [reps, T, D]
-            for r in range(reps):
-                layer = li + r
-                self.predictor.observe(layer, ids[r], w[r])
-                # classify against the *current* lut for stats
-                lut = self.res_mgr.policies[layer].lut
-                self.res_mgr.policies[layer].touch(np.unique(ids[r]))
-                ls = self.stats.layer(layer)
-                m = miss[r]
-                ls.hits += int((~m).sum())
-                ls.misses += int(m.sum())
-                nxt = (layer + 1) % len(self.res_mgr.policies)
-                demand = self.predictor.predict(nxt, h[r])
-                self.res_mgr.prepare_layer(nxt, demand)
-            li += reps
+        """Between-step rotation from routing telemetry: assemble the step's
+        [L, ...] arrays and hand off to the manager's shared helper (the
+        demand GEMM already ran on device — ``aux["demand_next"]``)."""
+        self.res_mgr.rotate_from_telemetry(
+            self.predictor,
+            concat_route_telemetry(aux, "ids", self._moe_segs),
+            concat_route_telemetry(aux, "weights", self._moe_segs),
+            concat_route_telemetry(aux, "miss", self._moe_segs),
+            np.asarray(aux["demand_next"]),
+        )

@@ -33,12 +33,20 @@ class Request:
 
 
 class Scheduler:
-    def __init__(self, num_slots: int, *, est_tok_s: float = 20.0):
+    def __init__(self, num_slots: int, *, est_tok_s: float = 20.0,
+                 est_prefill_tok_s: Optional[float] = None):
         self.num_slots = num_slots
         self.queue: List = []
         self.running: Dict[int, Request] = {}       # slot -> request
         self.free_slots = list(range(num_slots))
         self.est_tok_s = est_tok_s
+        # separate prefill-rate estimate: admission used to assume prefill is
+        # exactly 4x the decode rate, which the engine never corrected; the
+        # serving engine now feeds measured prefill tok/s into this EMA. The
+        # 4x prior survives only as the cold-start value.
+        self.est_prefill_tok_s = (
+            est_prefill_tok_s if est_prefill_tok_s is not None else 4 * est_tok_s
+        )
         self.rejected: List[Request] = []
         self.completed: List[Request] = []
         self._uid = itertools.count()
@@ -47,7 +55,7 @@ class Scheduler:
                deadline_s: Optional[float] = None) -> Request:
         req = Request(next(self._uid), np.asarray(prompt, np.int32), max_new,
                       deadline_s, submitted_at=now)
-        est = (len(prompt) / (4 * self.est_tok_s)) + max_new / self.est_tok_s
+        est = len(prompt) / self.est_prefill_tok_s + max_new / self.est_tok_s
         if deadline_s is not None and est > deadline_s:
             req.done = True
             req.truncated = True
@@ -83,6 +91,10 @@ class Scheduler:
 
     def observe_rate(self, tok_s: float) -> None:
         self.est_tok_s = 0.9 * self.est_tok_s + 0.1 * tok_s
+
+    def observe_prefill_rate(self, tok_s: float) -> None:
+        """Measured prefill tokens/s feedback (engine calls this per prefill)."""
+        self.est_prefill_tok_s = 0.9 * self.est_prefill_tok_s + 0.1 * tok_s
 
     @property
     def idle(self) -> bool:

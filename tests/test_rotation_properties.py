@@ -88,6 +88,32 @@ def test_cyclic_return_on_recurring_context():
     assert ring.pos == pos_a
 
 
+def test_ring_delta_wraps_at_seam():
+    """A cyclical-return jump across the ring seam reports the MINIMAL signed
+    delta: pos 0 -> pos E-1 is one reverse step, not E-1 forward steps."""
+    e = 16
+    assert RotaryRing._ring_delta(0, e - 1, e) == -1
+    assert RotaryRing._ring_delta(e - 1, 0, e) == 1
+    assert RotaryRing._ring_delta(2, 5, e) == 3
+    assert RotaryRing._ring_delta(5, 2, e) == -3
+    assert RotaryRing._ring_delta(3, 3, e) == 0
+    # exactly half the ring: forward direction preferred
+    assert RotaryRing._ring_delta(0, e // 2, e) == e // 2
+
+
+@given(
+    e=st.integers(4, 64),
+    src=st.integers(0, 1000),
+    dst=st.integers(0, 1000),
+)
+def test_ring_delta_minimal_and_consistent(e, src, dst):
+    """_ring_delta is the minimal signed distance and actually moves src->dst."""
+    src, dst = src % e, dst % e
+    d = RotaryRing._ring_delta(src, dst, e)
+    assert (src + d) % e == dst
+    assert abs(d) <= e // 2
+
+
 @given(st.integers(2, 50))
 def test_cosine_self_similarity(n):
     v = np.random.default_rng(n).random(n) + 0.1
