@@ -1,5 +1,6 @@
 # One reproducible invocation per CI concern (documented in ROADMAP.md).
 PYTHON ?= python
+SHELL := /bin/bash
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: dev-deps tier1 ci bench bench-decode
@@ -7,13 +8,16 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 dev-deps:          ## install test-only deps (hypothesis property coverage)
 	$(PYTHON) -m pip install -r requirements-dev.txt
 
-tier1:             ## the ROADMAP tier-1 gate (skips hypothesis modules if absent)
-	$(PYTHON) -m pytest -x -q
+tier1:             ## the ROADMAP tier-1 gate (skips hypothesis modules if absent);
+                   ## prints the pass-count delta vs the CHANGES.md tail
+	@set -o pipefail; $(PYTHON) -m pytest -x -q 2>&1 | tee .tier1.log; st=$$?; \
+	$(PYTHON) tools/tier1_delta.py .tier1.log CHANGES.md; exit $$st
 
 ci: dev-deps tier1 ## "green" in one command: dev deps + full tier-1 run
 
 bench:             ## all paper-table / kernel / hot-path benchmarks (emits BENCH_decode.json)
 	$(PYTHON) -m benchmarks.run
 
-bench-decode:      ## only the decode hot-path micro-benchmark (quick perf iteration)
-	$(PYTHON) -m benchmarks.decode_hot_path
+bench-decode:      ## decode hot-path micro-benchmark incl. the speculative
+                   ## spec[K] row family (appends spec rows to BENCH_decode.json)
+	$(PYTHON) -m benchmarks.decode_hot_path --spec-k 2,4,8

@@ -1,6 +1,7 @@
-"""Decode hot-path micro-benchmark: fused whole-stack step vs per-layer paths.
+"""Decode hot-path micro-benchmark: fused whole-stack step vs per-layer paths
+vs speculative multi-token windows.
 
-Three decode paths of the SAME engine are compared on the ``qwen2_moe_a2_7b``
+The decode paths of the SAME engine are compared on the ``qwen2_moe_a2_7b``
 reduced config:
 
 * ``seed``  — seed-style per-layer walk (``host_routing=True``: blocking
@@ -8,26 +9,33 @@ reduced config:
 * ``layer`` — PR-1 device-resident per-layer hot path (``fused_decode=False``:
   2 jitted halves per MoE layer, async telemetry, one logits pull per token);
 * ``fused`` — ONE compiled whole-stack step per token (donated KV state,
-  on-device demand prediction, batched slot uploads).
+  on-device demand prediction, batched slot uploads);
+* ``spec[K]`` — speculative self-drafting windows on the fused step: K tokens
+  per compiled launch and per queue-draining pull, rotation at window
+  boundaries (``--spec-k`` grows the row family).
 
-Acceptance checks: (a) greedy tokens IDENTICAL across all three paths under
-every residency mode (misses replay-corrected exactly), (b) accounting
-mechanism intact (every counted miss host-corrected; same number of routed
-assignments), (c) miss-free fused decode issues exactly ONE queue-draining
-device->host pull AND one compiled-program launch per token (O(1) dispatches
-vs the per-layer path's O(layers)), (d) the fused step beats the per-layer hot
-path on per-step wall clock (target >= 1.3x miss-free).
+Acceptance checks: (a) greedy tokens IDENTICAL across all paths under every
+residency mode (misses replay-corrected exactly; spec windows roll back +
+replay), (b) accounting mechanism intact (every counted miss host-corrected;
+same number of routed assignments), (c) miss-free fused decode issues exactly
+ONE queue-draining device->host pull AND one compiled-program launch per token
+— and miss-free spec-K decode exactly 1/K of each, (d) the fused step beats
+the per-layer hot path >= 1.3x miss-free, and spec-4 beats the fused
+single-token path >= 1.2x miss-free, (e) greedy self-drafting accepts every
+drafted token miss-free (accept_rate >= 1.0 — the KV-rollback canary).
 
-Run directly (``python -m benchmarks.decode_hot_path``) or via
-``python -m benchmarks.run`` / ``make bench-decode``; either way the row data
-lands in ``BENCH_decode.json`` so the perf trajectory accumulates across PRs.
+Run directly (``python -m benchmarks.decode_hot_path [--spec-k 2,4,8]``) or
+via ``python -m benchmarks.run`` / ``make bench-decode``; either way the row
+data lands in ``BENCH_decode.json`` so the perf trajectory accumulates across
+PRs.
 """
 from __future__ import annotations
 
+import argparse
 import dataclasses
 import json
 import time
-from typing import Dict
+from typing import Dict, Sequence, Tuple
 
 import jax
 import numpy as np
@@ -41,14 +49,16 @@ def _run_engine(cfg, params, mode: str, slots: int, path: str,
     from repro.core import RotaryEngine
     from repro.models.transformer import Runtime
 
+    spec_k = int(path[4:]) if path.startswith("spec") else 1
     eng = RotaryEngine(
         cfg, params, ResidencyConfig(mode=mode, num_slots=slots),
         rt=Runtime(cache_len=max(128, prompt.shape[1] + steps + 8)),
         batch=prompt.shape[0],
         host_routing=(path == "seed"),
         fused_decode=None if path != "layer" else False,
+        spec_k=spec_k,
     )
-    if path == "fused":
+    if path == "fused" or spec_k > 1:
         assert eng._fused_decode, "fused path unexpectedly unavailable"
     # warmup: populate the jit caches so the timed loop measures steady state
     logits = eng.prefill(prompt)
@@ -73,7 +83,7 @@ def _run_engine(cfg, params, mode: str, slots: int, path: str,
     }
 
 
-def run(steps: int = 16) -> Dict:
+def run(steps: int = 16, spec_ks: Sequence[int] = (2, 4, 8)) -> Dict:
     from repro.config import get_config
     from repro.configs import reduce_for_smoke
     from repro.models import init_params
@@ -88,25 +98,27 @@ def run(steps: int = 16) -> Dict:
 
     rows = {}
     e = cfg.moe.num_experts
+    spec_paths = tuple(f"spec{k}" for k in spec_ks)
     for suffix, mode, slots in (
         ("rotary", "rotary", 6),       # slot-starved: misses common, replay paid
         ("rotary_hi", "rotary", e),    # paper regime: prefetch covers routing
         ("full", "full", 0),
     ):
-        for path in PATHS:
+        for path in PATHS + spec_paths:
             rows[f"{path}_{suffix}"] = _run_engine(
                 cfg, params, mode, slots, path, prompt, steps
             )
 
-    # (a) greedy tokens identical across all three paths, every residency mode
+    # (a) greedy tokens identical across all paths, every residency mode —
+    # including every spec-K window size (rollback + replay keep exactness)
     for suffix in ("rotary", "rotary_hi", "full"):
-        for path in ("layer", "fused"):
+        for path in ("layer", "fused") + spec_paths:
             np.testing.assert_array_equal(
                 rows[f"seed_{suffix}"]["tokens"], rows[f"{path}_{suffix}"]["tokens"]
             )
     # (b) accounting mechanism unchanged: all routed assignments counted and
     # every miss host-corrected, in every path
-    for path in PATHS:
+    for path in PATHS + spec_paths:
         s = rows[f"{path}_rotary"]["engine"].stats
         assert s.hits + s.misses > 0
         assert sum(l.host_computed for l in s.layers.values()) == s.misses, path
@@ -123,13 +135,40 @@ def run(steps: int = 16) -> Dict:
         assert r["dispatches_per_step"] == 1.0, r
         assert r["engine"].stats.misses == 0
         assert rows[f"layer_{suffix}"]["dispatches_per_step"] >= 2 * cfg.num_layers
+    # (c') miss-free spec-K decode: 1/K pulls per token, and on full residency
+    # (no snapshot needed — misses impossible) 1/K launches per token
+    for k in spec_ks:
+        for suffix in ("full", "rotary_hi"):
+            r = rows[f"spec{k}_{suffix}"]
+            s = r["engine"].stats
+            assert s.misses == 0
+            assert r["sync_pulls_per_step"] == 1.0 / k, (k, suffix, r)
+            # (e) greedy self-draft with identical weights must accept every
+            # drafted token when miss-free — a KV-rollback bug canary
+            assert s.drafted_tokens > 0
+            assert s.accepted_tokens == s.drafted_tokens
+            assert s.accept_rate >= 1.0
+        assert rows[f"spec{k}_full"]["dispatches_per_step"] == 1.0 / k
+        # slot-starved spec windows actually rolled back and replayed
+        assert rows[f"spec{k}_rotary"]["engine"].stats.replayed_steps > 0
     return rows
 
 
-def main() -> None:
-    steps = 16
-    rows = run(steps)
-    order = [f"{p}_{s}" for s in ("full", "rotary_hi", "rotary") for p in PATHS]
+def main(argv: Sequence[str] | None = None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--spec-k", default="2,4,8",
+                    help="comma-separated speculative window sizes to row out")
+    ap.add_argument("--steps", type=int, default=16)
+    args = ap.parse_args(argv)
+    spec_ks: Tuple[int, ...] = tuple(
+        int(t) for t in args.spec_k.split(",") if t.strip()
+    )
+    assert 4 in spec_ks, "the >=1.2x acceptance gate is pinned at K=4"
+    steps = args.steps
+    rows = run(steps, spec_ks)
+    spec_paths = tuple(f"spec{k}" for k in spec_ks)
+    order = [f"{p}_{s}" for s in ("full", "rotary_hi", "rotary")
+             for p in PATHS + spec_paths]
     for label in order:
         r = rows[label]
         print(f"  {label:16s} {r['s_per_step']*1e3:8.2f} ms/step  "
@@ -144,14 +183,27 @@ def main() -> None:
             "fused_vs_layer": layer / fused,
             "fused_vs_seed": seed / fused,
         }
+        for k in spec_ks:
+            spec = rows[f"spec{k}_{suffix}"]["s_per_step"]
+            speedups[suffix][f"spec{k}_vs_fused"] = fused / spec
         print(f"  miss-free {suffix}: fused vs per-layer {layer / fused:.2f}x, "
-              f"fused vs seed {seed / fused:.2f}x")
-    print("  (slot-starved rotary pays whole-suffix replay per missed step; "
-          "the prefetch-covered regime is the paper's operating point)")
+              f"fused vs seed {seed / fused:.2f}x, "
+              + ", ".join(
+                  f"spec{k} vs fused {speedups[suffix][f'spec{k}_vs_fused']:.2f}x"
+                  for k in spec_ks
+              ))
+    print("  (slot-starved rotary pays whole-suffix replay per missed step — "
+          "spec windows additionally roll back and re-draft the rejected "
+          "suffix; the prefetch-covered regime is the paper's operating point)")
     for suffix, sp in speedups.items():
         print(f"decode_hot_path,speedup_fused_vs_layer_{suffix},{sp['fused_vs_layer']:.3f}")
         print(f"decode_hot_path,speedup_fused_vs_seed_{suffix},{sp['fused_vs_seed']:.3f}")
+        for k in spec_ks:
+            print(f"decode_hot_path,speedup_spec{k}_vs_fused_{suffix},"
+                  f"{sp[f'spec{k}_vs_fused']:.3f}")
     print(f"decode_hot_path,ms_per_step_fused_full,{rows['fused_full']['s_per_step']*1e3:.3f}")
+    print(f"decode_hot_path,accept_rate_spec4_full,"
+          f"{rows['spec4_full']['engine'].stats.accept_rate:.3f}")
     print("decode_hot_path,tokens_identical,1")
     payload = {
         "config": "qwen2_moe_a2_7b_reduced_f32",
@@ -163,6 +215,9 @@ def main() -> None:
                 "dispatches_per_step": rows[label]["dispatches_per_step"],
                 "misses": int(rows[label]["engine"].stats.misses),
                 "replayed_steps": int(rows[label]["engine"].stats.replayed_steps),
+                "drafted_tokens": int(rows[label]["engine"].stats.drafted_tokens),
+                "accepted_tokens": int(rows[label]["engine"].stats.accepted_tokens),
+                "accept_rate": rows[label]["engine"].stats.accept_rate,
             }
             for label in order
         },
@@ -179,6 +234,13 @@ def main() -> None:
     worst = min(sp["fused_vs_layer"] for sp in speedups.values())
     assert best >= 1.3, speedups
     assert worst >= 1.05, speedups
+    # acceptance: speculative windows at K=4 must beat the fused single-token
+    # path >= 1.2x miss-free (amortized launches + pulls + rotation), and not
+    # regress past timing noise in the other covered regime
+    best4 = max(sp["spec4_vs_fused"] for sp in speedups.values())
+    worst4 = min(sp["spec4_vs_fused"] for sp in speedups.values())
+    assert best4 >= 1.2, speedups
+    assert worst4 >= 1.0, speedups
 
 
 if __name__ == "__main__":

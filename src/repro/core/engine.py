@@ -32,6 +32,25 @@ the only compiled-program launch per miss-free token is the step itself
 rotation bookkeeping: EMA fold, ring transition, and batched slot uploads
 (one donated scatter per weight tensor per rotated layer).
 
+Speculative multi-token decode (``spec_k > 1``)
+-----------------------------------------------
+Greedy decode can advance K tokens per launch: ``build_fused_window_step``
+scans the fused step over a K-position self-drafting window (per-position
+``cur_len``, donated KV state carried across positions, next token = on-device
+argmax) against ONE residency snapshot, so a miss-free window costs one
+compiled launch and one queue-draining pull for K tokens. Acceptance is
+greedy (self-drafting with identical weights verifies against its own
+argmaxes — ``serving.sampler.greedy_accept`` is the plug point for real
+drafters; the stochastic rule is a hook): rejection comes only from residency
+misses, which invalidate a position and everything drafted after it. The
+first rejected position rolls the KV cache back (``tfm.rollback_kv_window``
+restores the pre-window slot contents captured by ``tfm.snapshot_kv_window`` —
+ring caches need real restoration, not just masking) and replays exactly like
+a missed single-token step; rotation is deferred to window boundaries, where
+``rotate_window_from_telemetry`` applies the committed steps' transitions
+one-by-one-equivalently while coalescing uploads to one batched scatter per
+layer per window.
+
 Exactness under misses is preserved by REPLAY: the fused step is the
 optimistic pass; when the end-of-step miss masks show a routed expert was not
 resident, the suffix from the first missed layer re-executes with the
@@ -98,14 +117,15 @@ def moe_segments(cfg: ModelConfig) -> List[int]:
 
 
 def concat_route_telemetry(
-    aux: Dict[str, jax.Array], name: str, moe_segs: List[int]
+    aux: Dict[str, jax.Array], name: str, moe_segs: List[int], axis: int = 0
 ) -> np.ndarray:
     """Per-segment ``route_{name}/seg*`` aux -> one [L, ...] host array in
-    MoE-ordinal order (shared by RotaryEngine and ServingEngine)."""
+    MoE-ordinal order (shared by RotaryEngine and ServingEngine). Speculative
+    windows stack a leading K axis, so their layer axis is ``axis=1``."""
     if len(moe_segs) == 1:
         return np.asarray(aux[f"route_{name}/seg{moe_segs[0]}"])
     return np.concatenate(
-        [np.asarray(aux[f"route_{name}/seg{si}"]) for si in moe_segs], axis=0
+        [np.asarray(aux[f"route_{name}/seg{si}"]) for si in moe_segs], axis=axis
     )
 
 
@@ -136,11 +156,24 @@ def build_fused_decode_step(
     with no replay path (the serving tick), saving their device->host copy.
     """
     moe_segs = moe_segments(cfg)
+    aux_fn = _demand_aux_fn(moe_segs, with_demand, keep_replay_anchor)
 
     def step(params, routers_next, token, state, cur_len, residency):
         logits, new_state, aux = tfm.decode_model(
             cfg, params, token, state, cur_len, rt, residency=residency
         )
+        return logits, new_state, aux_fn(aux, routers_next)
+
+    return jax.jit(step, donate_argnums=(3,) if donate_state else ())
+
+
+def _demand_aux_fn(
+    moe_segs: List[int], with_demand: bool, keep_replay_anchor: bool
+):
+    """Per-position aux hook shared by the single-token fused step and the
+    speculative window: in-graph demand GEMM + telemetry slimming."""
+
+    def aux_fn(aux, routers_next):
         if with_demand:
             h_all = jnp.concatenate(
                 [aux[f"route_h/seg{si}"] for si in moe_segs], axis=0
@@ -151,9 +184,72 @@ def build_fused_decode_step(
                 del aux[f"route_h/seg{si}"]
                 if not keep_replay_anchor:
                     del aux[f"route_x/seg{si}"]
-        return logits, new_state, aux
+        return aux
+
+    return aux_fn
+
+
+def build_fused_window_step(
+    cfg: ModelConfig,
+    rt: Runtime,
+    k_steps: int,
+    *,
+    with_demand: bool,
+    donate_state: bool = True,
+    keep_replay_anchor: bool = True,
+) -> Callable:
+    """ONE compiled program running ``k_steps`` greedy self-drafted decode
+    positions (the speculative window) — the multi-token sibling of
+    :func:`build_fused_decode_step`, shared by ``RotaryEngine`` and
+    ``ServingEngine``.
+
+    Returns a jitted ``fn(params, routers_next, token, state, cur_len,
+    residency) -> (draft [K, B], last_logits [B, V], new_state, aux)``. The
+    window scans :func:`tfm.decode_window`: per-position ``cur_len``, KV state
+    DONATED and carried across positions, the next position's token drafted
+    with an on-device argmax, and every position gathering from the SAME
+    residency snapshot (rotation happens at window boundaries). Telemetry
+    comes back with a leading window axis — ``route_*`` as [K, L, T, k] after
+    :func:`concat_route_telemetry`, ``demand_next`` as [K, L, E] — so the
+    caller can commit the accepted prefix and roll back the rest.
+    """
+    moe_segs = moe_segments(cfg)
+    aux_fn = _demand_aux_fn(moe_segs, with_demand, keep_replay_anchor)
+
+    def step(params, routers_next, token, state, cur_len, residency):
+        return tfm.decode_window(
+            cfg, params, token, state, cur_len, rt, k_steps,
+            residency=residency,
+            aux_fn=lambda aux: aux_fn(aux, routers_next),
+        )
 
     return jax.jit(step, donate_argnums=(3,) if donate_state else ())
+
+
+def build_window_fns(
+    cfg: ModelConfig,
+    rt: Runtime,
+    k: int,
+    *,
+    with_demand: bool,
+    keep_replay_anchor: bool = True,
+) -> Tuple[Callable, Callable, Callable]:
+    """The compiled speculative-window triple both engines cache per K:
+    (window step, KV snapshot, KV rollback). Rollback donates the state it
+    truncates; the snapshot is dispatched BEFORE the donating window, so it
+    reads the pre-window buffers."""
+    step = build_fused_window_step(
+        cfg, rt, k, with_demand=with_demand, donate_state=True,
+        keep_replay_anchor=keep_replay_anchor,
+    )
+    snap = jax.jit(lambda state, cl: tfm.snapshot_kv_window(cfg, state, cl, k))
+    roll = jax.jit(
+        lambda state, saved, cl, keep: tfm.rollback_kv_window(
+            cfg, state, saved, cl, k, keep
+        ),
+        donate_argnums=(0,),
+    )
+    return step, snap, roll
 
 
 class RotaryEngine:
@@ -169,6 +265,7 @@ class RotaryEngine:
         seed: int = 0,
         host_routing: bool = False,
         fused_decode: Optional[bool] = None,
+        spec_k: int = 1,
     ):
         """Decode-path switches (see module docstring for the mechanisms):
 
@@ -187,7 +284,16 @@ class RotaryEngine:
         * ``fused_decode=True``  — require the fused step (raises if the
           policy or stack cannot support it);
         * ``host_routing=True``  — seed-style engine: blocking per-layer
-          logits pull + numpy softmax/top-k (benchmark baseline).
+          logits pull + numpy softmax/top-k (benchmark baseline);
+        * ``spec_k=K``  (K > 1) — speculative multi-token decode: greedy
+          decode runs K-position self-drafting windows through ONE compiled
+          program (``build_fused_window_step``); residency misses reject the
+          window's suffix, which rolls the KV cache back
+          (``tfm.rollback_kv_window``) and replays the first rejected
+          position exactly like the single-token path replays a missed step.
+          Requires the fused path; non-greedy decode falls back to
+          single-token steps (the stochastic accept rule is a hook for now —
+          see ``repro.serving.sampler``).
         """
         assert cfg.has_moe, "RotaryEngine requires an MoE architecture"
         self.cfg = cfg
@@ -265,6 +371,20 @@ class RotaryEngine:
                 "LRU) and KV-cache-only block kinds"
             )
         self._fused_decode = fused_ok if fused_decode is None else bool(fused_decode)
+        assert spec_k >= 1, "spec_k is a window size (>= 1)"
+        if spec_k > 1:
+            assert self._fused_decode, (
+                "speculative decode (spec_k > 1) rides the fused whole-stack "
+                "step: it needs device routing (no host_routing, no LRU) and "
+                "KV-cache-only block kinds"
+            )
+            from repro.models import attention as attn_mod
+
+            cap = attn_mod._cache_capacity(cfg.attention, self.rt.cache_len)
+            assert spec_k <= cap, (
+                f"spec_k={spec_k} exceeds the KV cache capacity ({cap})"
+            )
+        self.spec_k = spec_k
         self._jits: Dict[Tuple, Callable] = {}
         self._head_jit = jax.jit(self._lm_head_impl)
         self._cost_cache: Dict[str, Tuple[float, float]] = {}
@@ -301,6 +421,14 @@ class RotaryEngine:
                 "segments": tuple(segs_p),
             }
             self._dstate = None          # stacked decode state (built by prefill)
+            # speculative windows: compiled (window, snapshot, rollback) per K
+            self._fused_windows: Dict[int, Tuple[Callable, Callable, Callable]] = {}
+            # the snapshot exists to make rollback exact; when misses are
+            # impossible (full residency) or never replayed, no window is ever
+            # rejected and the pre-window gather is pure overhead
+            self._spec_needs_rollback = (
+                rescfg.mode != "full" and rescfg.host_compute_misses
+            )
         self._warm_start()
 
     # ------------------------------------------------------------------
@@ -678,19 +806,7 @@ class RotaryEngine:
         # stats + modeled clock for the authoritative prefix in seed order
         # (layers before the first miss are exact as computed; the replay
         # charges the suffix itself)
-        xshape = (self.batch, 1, self.cfg.d_model)
-        for li, (kind, _) in enumerate(self.layers):
-            if li >= start_li:
-                break
-            moe_li = self.moe_index[li]
-            if moe_li is not None:
-                self.manager.record_routing(moe_li, ids[moe_li], miss[moe_li])
-                hits = int((~miss[moe_li]).sum())
-                flops, byts = self._layer_cost(kind, xshape, cur_len, hits=hits)
-                self.clock.compute(self.cost.compute_s(flops, byts))
-            else:
-                flops, byts = self._layer_cost(kind, xshape, cur_len, hits=0)
-                self.clock.compute(self.cost.compute_s(flops, byts), needs_dma=False)
+        self._account_step_prefix(ids, miss, start_li, cur_len)
         if start_li < len(self.layers):
             logits = self._replay_fused(aux, start_moe, start_li, cur_len)
         # between-step rotation: the pre-gating GEMM already ran on device;
@@ -702,8 +818,149 @@ class RotaryEngine:
         )
         return logits
 
+    def _account_step_prefix(
+        self, ids: np.ndarray, miss: np.ndarray, stop_li: int, cur_len: int
+    ) -> None:
+        """record_routing + modeled clock for layers ``< stop_li`` of one
+        authoritative decode position (ids/miss [L, T, k]), in seed order —
+        shared by the fused step and every position of a speculative window."""
+        xshape = (self.batch, 1, self.cfg.d_model)
+        for li, (kind, _) in enumerate(self.layers):
+            if li >= stop_li:
+                break
+            moe_li = self.moe_index[li]
+            if moe_li is not None:
+                self.manager.record_routing(moe_li, ids[moe_li], miss[moe_li])
+                hits = int((~miss[moe_li]).sum())
+                flops, byts = self._layer_cost(kind, xshape, cur_len, hits=hits)
+                self.clock.compute(self.cost.compute_s(flops, byts))
+            else:
+                flops, byts = self._layer_cost(kind, xshape, cur_len, hits=0)
+                self.clock.compute(self.cost.compute_s(flops, byts), needs_dma=False)
+
+    # ------------------------------------------------------------------
+    # speculative multi-token decode (ONE compiled window per K tokens)
+    # ------------------------------------------------------------------
+    def _window_fns(self, k: int) -> Tuple[Callable, Callable, Callable]:
+        """Compiled (window step, KV snapshot, KV rollback) triple for window
+        size ``k`` (cached — decode tails may need a smaller final window)."""
+        fns = self._fused_windows.get(k)
+        if fns is None:
+            fns = build_window_fns(self.cfg, self.rt, k, with_demand=True)
+            self._fused_windows[k] = fns
+        return fns
+
+    def _decode_window_fused(
+        self, tok: np.ndarray, k: int
+    ) -> Tuple[np.ndarray, np.ndarray, int]:
+        """One speculative window: ``k`` greedy self-drafted positions through
+        ONE compiled program, one queue-draining pull, acceptance by the miss
+        telemetry, KV rollback + suffix replay for the first rejected
+        position, rotation at the window boundary.
+
+        ``tok`` [B] is the position-0 token (already emitted by the caller).
+        Returns ``(extra [committed-1, B], logits [B, V], committed)``:
+        ``extra`` are the drafted tokens that committed beyond ``tok``, and
+        ``logits`` continue the greedy chain (the last committed position's —
+        replay-corrected when that position missed). Exactness: positions
+        before the first miss saw exactly the inputs and residency the
+        single-token fused path would have used (the window defers rotation
+        to its boundary, and a miss-free step's rotation cannot change its
+        own output — only WHERE later steps' compute happens, which the
+        replay machinery already corrects), so committed tokens are
+        bit-identical to single-token decode.
+        """
+        cur_len0 = self.cur_len
+        residency = self.manager.stacked_residency()
+        step_fn, snap_fn, roll_fn = self._window_fns(k)
+        saved = None
+        if self._spec_needs_rollback:
+            # gather the pre-window contents of the K slots the window will
+            # write, BEFORE the window donates (and mutates) the state
+            saved = snap_fn(self._dstate, jnp.int32(cur_len0))
+            self.stats.device_dispatches += 1
+        draft_dev, logits_dev, self._dstate, aux = step_fn(
+            self._decode_params, self._routers_next, jnp.asarray(tok),
+            self._dstate, jnp.int32(cur_len0), residency,
+        )
+        self.stats.device_dispatches += 1
+        self.stats.spec_windows += 1
+        for key in self._pull_keys:
+            aux[key].copy_to_host_async()
+        draft_dev.copy_to_host_async()
+        self.stats.overlapped_pulls += len(self._pull_keys) + 1
+        logits = np.asarray(logits_dev)        # THE one queue-draining pull
+        self.stats.sync_pulls += 1
+        draft = np.asarray(draft_dev)                               # [K, B]
+        ids = concat_route_telemetry(aux, "ids", self._moe_segs, axis=1)
+        weights = concat_route_telemetry(aux, "weights", self._moe_segs, axis=1)
+        miss = concat_route_telemetry(aux, "miss", self._moe_segs, axis=1)
+        demand_next = np.asarray(aux["demand_next"])                # [K, L, E]
+        # --- accept rule ------------------------------------------------
+        # greedy self-draft with identical weights: the verification argmaxes
+        # ARE the drafted tokens, so the token-level rule accepts everything
+        # (the call is the plug point for a separate drafter / the stochastic
+        # hook) and rejection comes only from residency misses invalidating a
+        # position and everything drafted after it
+        from repro.serving.sampler import greedy_accept
+
+        accept = int(greedy_accept(draft, draft).min())
+        miss_steps = miss.reshape(k, -1).any(axis=1)                # [K]
+        missed = np.flatnonzero(miss_steps)
+        j_star = None
+        if missed.size and self.rescfg.host_compute_misses:
+            j_star = int(missed[0])
+            accept = min(accept, j_star)
+        self.stats.drafted_tokens += k
+        self.stats.accepted_tokens += accept
+        # --- stats + modeled clock for fully-accepted positions ---------
+        for s in range(accept):
+            self._account_step_prefix(
+                ids[s], miss[s], len(self.layers), cur_len0 + s
+            )
+        committed = accept
+        if j_star is not None:
+            # reject the suffix: roll the KV cache back past position j*
+            # (restore the pre-window slot contents the rejected positions
+            # overwrote — ``tfm.rollback_kv_window``), then replay position
+            # j* from its first missed layer exactly like a missed
+            # single-token step
+            miss_j = miss[j_star]
+            start_moe = int(
+                np.flatnonzero(
+                    miss_j.reshape(miss_j.shape[0], -1).any(axis=1)
+                )[0]
+            )
+            start_li = self._moe_layer_li[start_moe]
+            self._dstate = roll_fn(
+                self._dstate, saved, jnp.int32(cur_len0), jnp.int32(j_star + 1)
+            )
+            self.stats.device_dispatches += 1
+            self._account_step_prefix(
+                ids[j_star], miss[j_star], start_li, cur_len0 + j_star
+            )
+            logits = self._replay_fused(
+                aux, start_moe, start_li, cur_len0 + j_star, step=j_star
+            )
+            committed = j_star + 1
+        # --- window-boundary rotation from committed telemetry ----------
+        # host-side transitions run per committed step (residency evolves
+        # exactly as one-token-at-a-time); uploads + LUT patches amortize to
+        # one batched dispatch per layer per window
+        self.manager.rotate_window_from_telemetry(
+            self.predictor, ids[:committed], weights[:committed],
+            miss[:committed], demand_next[:committed],
+            clock=self.clock, record=False,
+        )
+        return draft[: committed - 1], logits, committed
+
     def _replay_fused(
-        self, aux: Dict[str, jax.Array], start_moe: int, start_li: int, cur_len: int
+        self,
+        aux: Dict[str, jax.Array],
+        start_moe: int,
+        start_li: int,
+        cur_len: int,
+        step: Optional[int] = None,
     ) -> np.ndarray:
         """Exact re-execution of a fused-step SUFFIX after an observed miss.
 
@@ -715,9 +972,17 @@ class RotaryEngine:
         runs strictly after this replay. Re-running an attention block
         overwrites the very KV slot the optimistic pass wrote, so the
         post-step donated state is a valid replay substrate.
+
+        ``step`` indexes a speculative window's leading K axis (the rejected
+        position being replayed at ``cur_len``); the window path rolls the KV
+        cache back past ``step`` BEFORE calling this, so the cache the suffix
+        reads holds no writes from rejected positions.
         """
         si0, r0 = self._moe_pos[start_moe]
-        x = aux[f"route_x/seg{si0}"][r0].reshape(self.batch, 1, -1)
+        x_anchor = aux[f"route_x/seg{si0}"]
+        if step is not None:
+            x_anchor = x_anchor[step]
+        x = x_anchor[r0].reshape(self.batch, 1, -1)
         self.stats.device_dispatches += 1             # device-side slice
         cur = jnp.int32(cur_len)
         clock = self.clock
@@ -738,6 +1003,7 @@ class RotaryEngine:
                 weights = np.asarray(w_dev)
                 miss = np.asarray(miss_dev)
                 self.stats.sync_pulls += 1
+                self.stats.replay_pulls += 1
                 self.manager.record_routing(moe_li, ids, miss)
                 if miss.any() and self.rescfg.host_compute_misses:
                     x = self._host_correct(x, moe_li, h2, ids, weights, miss)
@@ -754,6 +1020,7 @@ class RotaryEngine:
             self._set_layer_state(li, new_state)
         logits = np.asarray(self._lm_head(x[:, -1:])[:, 0])
         self.stats.sync_pulls += 1
+        self.stats.replay_pulls += 1
         self.stats.replayed_steps += 1
         return logits
 
@@ -827,14 +1094,24 @@ class RotaryEngine:
         greedy: bool = True,
         seed: int = 0,
     ) -> np.ndarray:
-        """Generate ``steps`` tokens. Returns [B, steps]."""
+        """Generate ``steps`` tokens. Returns [B, steps].
+
+        With ``spec_k > 1`` greedy decode advances in speculative windows:
+        each window emits up to ``spec_k`` tokens from ONE compiled program
+        launch and one queue-draining pull (bit-identical to single-token
+        decode — rejected positions are rolled back and replayed). Sampled
+        decode falls back to single-token steps (greedy accept rule only for
+        now; the stochastic hook lives in ``repro.serving.sampler``).
+        """
         from repro.core.predictor import softmax as np_softmax
 
         rng = np.random.default_rng(seed)
         out = np.zeros((self.batch, steps), np.int32)
         logits = last_logits
+        spec = self._fused_decode and self.spec_k > 1 and greedy
         t0 = time.perf_counter()
-        for i in range(steps):
+        i = 0
+        while i < steps:
             if greedy:
                 tok = np.argmax(logits, axis=-1).astype(np.int32)
             else:
@@ -843,18 +1120,27 @@ class RotaryEngine:
                     [rng.choice(p.shape[-1], p=row) for row in p], np.int32
                 )
             out[:, i] = tok
-            if self._fused_decode:
-                logits = self._decode_step_fused(tok)
-            elif self._hot_decode:
-                logits = self._decode_step_hot(tok)
+            k = min(self.spec_k, steps - i) if spec else 1
+            if k > 1:
+                extra, logits, committed = self._decode_window_fused(tok, k)
+                if committed > 1:
+                    out[:, i + 1 : i + committed] = extra.T
+                advanced = committed
             else:
-                x = self._embed(jnp.asarray(tok)[:, None])
-                x = self._run_layers(x, "decode", cur_len=self.cur_len)
-                logits = np.asarray(self._lm_head(x[:, -1:])[:, 0])
-                self.stats.sync_pulls += 1
-            self.cur_len += 1
-            self.stats.steps += 1
-            self.stats.tokens += self.batch
+                if self._fused_decode:
+                    logits = self._decode_step_fused(tok)
+                elif self._hot_decode:
+                    logits = self._decode_step_hot(tok)
+                else:
+                    x = self._embed(jnp.asarray(tok)[:, None])
+                    x = self._run_layers(x, "decode", cur_len=self.cur_len)
+                    logits = np.asarray(self._lm_head(x[:, -1:])[:, 0])
+                    self.stats.sync_pulls += 1
+                advanced = 1
+            i += advanced
+            self.cur_len += advanced
+            self.stats.steps += advanced
+            self.stats.tokens += self.batch * advanced
         self.stats.wall_s += time.perf_counter() - t0
         self.stats.compute_s = self.clock.compute_s
         self.stats.transfer_s = self.clock.transfer_s

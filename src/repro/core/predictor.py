@@ -69,6 +69,29 @@ class DemandPredictor:
         self.smoothed[layer] = self.ema * self.smoothed[layer] + (1 - self.ema) * demand
         return self.smoothed[layer].copy()
 
+    def fold_window(
+        self,
+        layer: int,
+        ids: np.ndarray,         # [K, T, k] routed ids, one row per window step
+        weights: np.ndarray,     # [K, T, k]
+        demands: np.ndarray,     # [K, E] on-device demand samples per step
+    ) -> np.ndarray:
+        """Demand aggregated over a speculative window: fold every accepted
+        step's (observed routing, predicted demand) pair into the EMA in step
+        order, returning the smoothed demand AFTER each step [K, E].
+
+        One call per layer per window replaces 2K ``observe``/``update`` calls
+        while staying bit-identical to applying the same K steps one token at
+        a time — the invariant the window-deferred-rotation property tests
+        pin down (residency transitions consume row ``s`` exactly where a
+        sequential engine would have used step ``s``'s smoothed demand).
+        """
+        out = np.empty((ids.shape[0], self.routers[layer].shape[1]), np.float64)
+        for s in range(ids.shape[0]):
+            self.observe(layer, ids[s], weights[s])
+            out[s] = self.update(layer, demands[s])
+        return out
+
     def next_layer_routers(self) -> np.ndarray:
         """Stacked router matrices [L, D, E] with R[l] = router of layer
         (l+1) % L, so ``softmax(h_l @ R[l])`` is layer l+1's demand predicted

@@ -164,20 +164,29 @@ class RotaryResidencyManager:
         self._seg_cache: Dict[int, Tuple[Tuple[int, ...], Any]] = {}
 
     # ------------------------------------------------------------------
-    def prepare_layer(self, layer: int, demand: np.ndarray, clock: Optional[TransferClock] = None) -> int:
-        """Run the proactive policy transition; execute uploads. Returns bytes."""
+    def _transition(self, layer: int, demand: np.ndarray) -> List[Tuple[int, int]]:
+        """Run the policy's proactive transition (ring move + LUT updates) and
+        account its rotation decision; returns the loads WITHOUT executing
+        them — the window rotation path coalesces loads across steps before
+        uploading."""
         policy = self.policies[layer]
         loads = policy.prepare(demand)
-        moved = self._execute_loads(layer, loads)
         ls = self.stats.layer(layer)
-        ls.loads += len(loads)
-        ls.bytes_loaded += moved
         decision = getattr(policy, "last_decision", None)
         if decision is not None:
             if decision.reverse_jump:
                 ls.reverse_rotations += 1
             elif decision.delta:
                 ls.forward_rotations += 1
+        return loads
+
+    def prepare_layer(self, layer: int, demand: np.ndarray, clock: Optional[TransferClock] = None) -> int:
+        """Run the proactive policy transition; execute uploads. Returns bytes."""
+        loads = self._transition(layer, demand)
+        moved = self._execute_loads(layer, loads)
+        ls = self.stats.layer(layer)
+        ls.loads += len(loads)
+        ls.bytes_loaded += moved
         if clock is not None:
             clock.prefetch(moved)
         return moved
@@ -300,6 +309,91 @@ class RotaryResidencyManager:
         for l in range(n):
             nxt = (l + 1) % n
             self.prepare_layer(nxt, predictor.update(nxt, demand_next[l]), clock)
+
+    def _coalesce_loads(
+        self, layer: int, loads: List[Tuple[int, int]]
+    ) -> List[Tuple[int, int]]:
+        """Collapse a window's worth of pending loads to the last write per
+        slot, dropping writes the LUT no longer references (an expert loaded
+        then rotated away within the window never needs to touch the link)."""
+        lut = self.policies[layer].lut
+        final: Dict[int, int] = {}
+        for e, s in loads:
+            final[s] = e
+        return [(e, s) for s, e in final.items() if lut.s2e[s] == e]
+
+    def rotate_window_from_telemetry(
+        self,
+        predictor,                       # DemandPredictor
+        ids: np.ndarray,                 # [K, L, T, k] routed ids per window step
+        weights: np.ndarray,             # [K, L, T, k]
+        miss: np.ndarray,                # [K, L, T, k]
+        demand_next: np.ndarray,         # [K, L, E]; [s, l] = step s's demand
+                                         # for layer (l+1)%L
+        clock: Optional[TransferClock] = None,
+        record: bool = True,
+        accepted: Optional[np.ndarray] = None,
+    ) -> None:
+        """Window-boundary rotation from a speculative window's telemetry.
+
+        The HOST-side transitions (EMA folds, ring moves, LUT updates) run
+        once per committed step in step order — residency after the window is
+        bit-identical to feeding the same steps through
+        :meth:`rotate_from_telemetry` one at a time (the property the
+        rotation-equivalence tests pin). What the window amortizes is the
+        LINK: slot uploads coalesce to the last write per slot and ship as
+        ONE batched scatter per weight tensor per layer per window, and the
+        device LUT is patched once per layer instead of once per step.
+
+        ``accepted`` (optional, [B] per-row committed counts) supports the
+        serving engine's ragged acceptance: step ``s`` contributes a row's
+        routing to the hit/miss accounting and the predictor EMA only while
+        ``s < accepted[row]`` — a rejected position re-decodes next window
+        and is recorded THEN, never twice, and routing computed from wrong
+        drafted inputs never pollutes prediction. (The rotary engine commits
+        batch-uniformly and pre-slices instead, leaving ``accepted=None``.)
+        """
+        n = len(self.policies)
+        if accepted is not None:
+            accepted = np.asarray(accepted)
+            k_eff = int(accepted.max(initial=0))
+            if k_eff == 0:
+                return
+            ids, weights, miss, demand_next = (
+                a[:k_eff] for a in (ids, weights, miss, demand_next)
+            )
+        k_steps = ids.shape[0]
+
+        def rows(s: int):
+            return slice(None) if accepted is None else accepted > s
+
+        pending: List[List[Tuple[int, int]]] = [[] for _ in range(n)]
+        if record:
+            for s in range(k_steps):
+                for l in range(n):
+                    self.record_routing(l, ids[s, l][rows(s)], miss[s, l][rows(s)])
+        for l in range(n):
+            nxt = (l + 1) % n
+            if accepted is None:
+                smoothed = predictor.fold_window(
+                    nxt, ids[:, nxt], weights[:, nxt], demand_next[:, l]
+                )
+            else:
+                smoothed = []
+                for s in range(k_steps):
+                    sel = rows(s)
+                    predictor.observe(nxt, ids[s, nxt][sel], weights[s, nxt][sel])
+                    smoothed.append(predictor.update(nxt, demand_next[s, l]))
+            for s in range(k_steps):
+                pending[nxt].extend(self._transition(nxt, smoothed[s]))
+        for l in range(n):
+            loads = self._coalesce_loads(l, pending[l])
+            moved = self._execute_loads(l, loads)
+            ls = self.stats.layer(l)
+            ls.loads += len(loads)
+            ls.bytes_loaded += moved
+            if clock is not None:
+                clock.prefetch(moved)
 
     # ------------------------------------------------------------------
     def layer_residency(self, layer: int) -> Dict[str, Any]:

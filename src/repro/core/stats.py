@@ -45,6 +45,16 @@ class EngineStats:
     upload_dispatches: int = 0      # slot-upload scatter launches (batched: one
                                     # per weight tensor per rotation, not per expert)
     replayed_steps: int = 0         # decode steps suffix-replayed after a miss
+    replay_pulls: int = 0           # sync_pulls issued BY replay (subset of
+                                    # sync_pulls; lets the speculative window's
+                                    # 1-pull-per-window bound be checked net of
+                                    # the exactness machinery's own reads)
+    spec_windows: int = 0           # speculative windows launched
+    drafted_tokens: int = 0         # tokens self-drafted inside spec windows
+    accepted_tokens: int = 0        # drafted tokens that committed (greedy
+                                    # self-draft: rejections come only from
+                                    # residency misses, so accept-rate < 1 is
+                                    # a KV-rollback / replay canary)
 
     def layer(self, idx: int) -> LayerStats:
         return self.layers.setdefault(idx, LayerStats())
@@ -65,6 +75,16 @@ class EngineStats:
     @property
     def bytes_loaded(self) -> int:
         return sum(l.bytes_loaded for l in self.layers.values())
+
+    @property
+    def accept_rate(self) -> float:
+        """Accepted / drafted over all speculative windows (1.0 when no
+        speculation ran — the non-speculative path 'accepts' every token)."""
+        return (
+            self.accepted_tokens / self.drafted_tokens
+            if self.drafted_tokens
+            else 1.0
+        )
 
     def modeled_step_time(self) -> float:
         """Per-token modeled latency: compute + unhidden transfer + host misses."""
@@ -91,4 +111,8 @@ class EngineStats:
             "lut_patch_dispatches": self.lut_patch_dispatches,
             "upload_dispatches": self.upload_dispatches,
             "replayed_steps": self.replayed_steps,
+            "spec_windows": self.spec_windows,
+            "drafted_tokens": self.drafted_tokens,
+            "accepted_tokens": self.accepted_tokens,
+            "accept_rate": round(self.accept_rate, 4),
         }

@@ -32,6 +32,12 @@ def main() -> None:
     ap.add_argument("--cache-len", type=int, default=256)
     ap.add_argument("--host-routing", action="store_true",
                     help="seed-style per-layer host routing (benchmark baseline)")
+    ap.add_argument("--spec-k", type=int, default=1,
+                    help="rotary-engine speculative window (tokens per fused "
+                         "launch; 1 = single-token decode)")
+    ap.add_argument("--spec-cap", type=int, default=4,
+                    help="batch-engine per-row speculative length cap "
+                         "(1 disables speculation)")
     ap.add_argument("--quantization", default=None, choices=[None, "int8"])
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
@@ -61,6 +67,7 @@ def main() -> None:
         eng = RotaryEngine(
             cfg, params, rescfg or ResidencyConfig(mode="rotary", num_slots=slots),
             rt=rt, batch=b, host_routing=args.host_routing,
+            spec_k=max(1, args.spec_k),
         )
         # serve requests in decode groups of --batch (device-resident hot path
         # amortizes the per-step host interaction over all rows of the group)
@@ -78,6 +85,7 @@ def main() -> None:
     eng = ServingEngine(
         cfg, params, rt=rt, num_slots=args.batch_slots, residency=rescfg,
         sampler=SamplerConfig(temperature=args.temperature, seed=args.seed),
+        spec_cap=max(1, args.spec_cap),
     )
     for _ in range(args.requests):
         plen = int(rng.integers(4, args.prompt_len + 1))

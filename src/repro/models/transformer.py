@@ -629,3 +629,143 @@ def decode_model(
     h, state, aux = _run_stack(cfg, params, rt, x, "decode", state, cur_len, residency)
     logits = lm_logits(cfg, params, h[:, -1:])[:, 0]
     return logits, state, aux
+
+
+def decode_window(
+    cfg: ModelConfig,
+    params: Params,
+    token: jax.Array,            # [B] int32 first token of the window
+    state: Any,
+    cur_len: jax.Array,          # scalar or [B] int32: tokens already in cache
+    rt: Runtime,
+    k_steps: int,
+    residency: Optional[Any] = None,
+    aux_fn: Optional[Any] = None,
+) -> Tuple[jax.Array, jax.Array, Any, Aux]:
+    """``k_steps`` greedy self-drafted decode steps in ONE traced program.
+
+    A ``lax.scan`` over :func:`decode_model` threads (token, state, cur_len)
+    through the window: each position runs the whole stack at its own
+    ``cur_len`` (scalar engine or per-row [B] serving batches) and drafts the
+    next token with an on-device argmax — the self-drafting half of the
+    speculative decode path. The residency pytree is a scan constant, so every
+    window position gathers from the SAME residency snapshot (rotation is the
+    caller's job, at window boundaries).
+
+    Returns ``(draft [K, B], last_logits [B, V] f32, new_state, aux)`` where
+    ``draft[j]`` is the argmax of position j's logits (the token position j+1
+    consumed) and every aux entry is stacked with a leading window axis [K, ...].
+    ``aux_fn`` (optional) post-processes each position's aux dict before
+    stacking (the engine's on-device demand GEMM). Logits are carried in f32 —
+    a lossless upcast, so the caller's host argmax matches the single-token
+    step bit-for-bit.
+    """
+    b = token.shape[0]
+    logits0 = jnp.zeros((b, cfg.vocab_size), jnp.float32)
+
+    def body(carry, _):
+        tok, st, cl, _ = carry
+        logits, st, aux = decode_model(
+            cfg, params, tok, st, cl, rt, residency=residency
+        )
+        if aux_fn is not None:
+            aux = aux_fn(aux)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return (nxt, st, cl + 1, logits.astype(jnp.float32)), (nxt, aux)
+
+    init = (
+        jnp.asarray(token, jnp.int32),
+        state,
+        jnp.asarray(cur_len, jnp.int32),
+        logits0,
+    )
+    (_, state, _, logits), (draft, aux) = jax.lax.scan(
+        body, init, None, length=k_steps
+    )
+    return draft, logits, state, aux
+
+
+# ===========================================================================
+# KV window snapshot / rollback (speculative decode truncation)
+# ===========================================================================
+_KV_KINDS = ("attn_mlp", "attn_moe", "local_attn")
+
+
+def _kv_window_slots(
+    cache: jax.Array, cur_len: jax.Array, k_steps: int
+) -> Tuple[jax.Array, jax.Array]:
+    """Row/slot index arrays for the ``k_steps`` cache slots a decode window
+    starting at ``cur_len`` writes. cache [reps, B, cap, Hkv, dh]."""
+    cap, b = cache.shape[2], cache.shape[1]
+    assert k_steps <= cap, (
+        f"speculative window ({k_steps}) exceeds KV capacity ({cap})"
+    )
+    cl = jnp.broadcast_to(jnp.asarray(cur_len, jnp.int32), (b,))
+    slots = (cl[:, None] + jnp.arange(k_steps, dtype=jnp.int32)[None, :]) % cap
+    return jnp.arange(b)[:, None], slots                    # [B, 1], [B, K]
+
+
+def snapshot_kv_window(cfg: ModelConfig, state: Any, cur_len: jax.Array,
+                       k_steps: int) -> Any:
+    """Pre-window copies of the KV slots the next ``k_steps`` decode positions
+    overwrite — the substrate :func:`rollback_kv_window` restores from.
+
+    Mirrors the stacked decode-state layout (segments x unit positions), with
+    {} at non-KV positions; each KV leaf becomes [reps, B, K, Hkv, dh]. A tiny
+    gather (K slots per layer), so speculation can truncate exactly: full
+    caches get their zeros back, ring caches their previous-lap entries (which
+    a rejected window's writes would otherwise destroy).
+    """
+    segs = []
+    for si, (unit, reps) in enumerate(cfg.segments):
+        unit_saved = []
+        for pi, kind in enumerate(unit):
+            if kind in _KV_KINDS:
+                def take(c):
+                    rows, slots = _kv_window_slots(c, cur_len, k_steps)
+                    return c[:, rows, slots]
+                unit_saved.append(jax.tree.map(take, state[si][pi]))
+            else:
+                unit_saved.append({})
+        segs.append(tuple(unit_saved))
+    return tuple(segs)
+
+
+def rollback_kv_window(
+    cfg: ModelConfig,
+    state: Any,
+    saved: Any,
+    cur_len: jax.Array,
+    k_steps: int,
+    keep: jax.Array,             # scalar or [B]: window positions to keep
+) -> Any:
+    """KV truncate after a partially rejected speculative window.
+
+    Restores the pre-window contents (``saved``, from
+    :func:`snapshot_kv_window`) of every cache slot written by window offsets
+    ``>= keep`` — per-row ``keep`` supports ragged serving batches — leaving
+    offsets ``< keep`` (the accepted prefix) in place. Truncate-then-redecode
+    is bit-identical to never having speculated: the restored state matches
+    the one a sequential decode would hold at length ``cur_len + keep``.
+    """
+    offs = jnp.arange(k_steps, dtype=jnp.int32)
+    segs = []
+    for si, (unit, reps) in enumerate(cfg.segments):
+        unit_new = []
+        for pi, kind in enumerate(unit):
+            st = state[si][pi]
+            if kind in _KV_KINDS:
+                def roll(c, s):
+                    rows, slots = _kv_window_slots(c, cur_len, k_steps)
+                    kp = jnp.broadcast_to(
+                        jnp.asarray(keep, jnp.int32), (c.shape[1],)
+                    )
+                    mask = offs[None, :] >= kp[:, None]             # [B, K]
+                    cur = c[:, rows, slots]
+                    blended = jnp.where(mask[None, :, :, None, None], s, cur)
+                    return c.at[:, rows, slots].set(blended)
+                unit_new.append(jax.tree.map(roll, st, saved[si][pi]))
+            else:
+                unit_new.append(st)
+        segs.append(tuple(unit_new))
+    return tuple(segs)

@@ -36,6 +36,7 @@ import numpy as np
 from repro.config.base import ModelConfig, ResidencyConfig
 from repro.core.engine import (
     build_fused_decode_step,
+    build_window_fns,
     concat_route_telemetry,
     moe_segments,
 )
@@ -59,15 +60,36 @@ class ServingEngine:
         residency: Optional[ResidencyConfig] = None,
         sampler: Optional[SamplerConfig] = None,
         eos: Optional[int] = None,
+        spec_cap: int = 4,
     ):
+        """``spec_cap`` bounds per-row speculative decode: when sampling is
+        greedy and the stack is KV-cache-only, ticks run self-drafting windows
+        through ``build_fused_window_step``, sized by the SCHEDULER's learned
+        per-row speculative lengths (``spec_cap=1`` disables speculation)."""
         self.cfg = cfg
         self.params = params
         self.rt = rt or Runtime(cache_len=1024)
         self.batch = num_slots
         self.eos = eos
-        self.scheduler = Scheduler(num_slots)
         self.sampler = Sampler(sampler or SamplerConfig())
         self.stats = EngineStats()
+        # speculative windows need KV-only state (rollback restores cache
+        # slots; a recurrent update is destructive) and greedy drafting (the
+        # stochastic accept rule is still a hook — see repro.serving.sampler)
+        kv_only = all(
+            k in ("attn_mlp", "attn_moe", "local_attn") for k in cfg.layer_kinds
+        )
+        self._spec_ok = (
+            spec_cap > 1 and kv_only and self.sampler.cfg.temperature <= 0.0
+        )
+        self._spec_cap_eff = 1
+        if self._spec_ok:
+            from repro.models import attention as attn_mod
+
+            cap = attn_mod._cache_capacity(cfg.attention, self.rt.cache_len)
+            self._spec_cap_eff = max(1, min(spec_cap, cap))
+            self._spec_ok = self._spec_cap_eff > 1
+        self.scheduler = Scheduler(num_slots, spec_cap=self._spec_cap_eff)
 
         self.state = tfm.zero_state(cfg, self.batch, self.rt.cache_len)
         self.lengths = np.zeros((self.batch,), np.int32)
@@ -113,6 +135,21 @@ class ServingEngine:
         )
         self._moe_segs = moe_segments(cfg)
         self._prefill_cache: Dict[int, Any] = {}
+        self._window_cache: Dict[int, Any] = {}
+
+    def _window_fns(self, k: int):
+        """Compiled (window step, KV snapshot, KV rollback) for window size
+        ``k`` — the rotary engine's speculative triple, minus the replay path
+        (so the window drops the ``route_x`` anchors)."""
+        fns = self._window_cache.get(k)
+        if fns is None:
+            fns = build_window_fns(
+                self.cfg, self.rt, k,
+                with_demand=self.res_mgr is not None,
+                keep_replay_anchor=False,
+            )
+            self._window_cache[k] = fns
+        return fns
 
     # ------------------------------------------------------------------
     def _prefill_one(self, prompt: np.ndarray) -> Any:
@@ -181,6 +218,19 @@ class ServingEngine:
             if not self.scheduler.running:
                 ticks += 1
                 continue
+            # per-row learned speculative lengths: the tick self-drafts as far
+            # as the slowest-adapting ACTIVE row allows (windows are batch-wide
+            # programs; acceptance and KV rollback are per-row)
+            k_tick = 1
+            if self._spec_ok:
+                k_tick = min(
+                    self.scheduler.spec_len(s) for s in self.scheduler.running
+                )
+                k_tick = max(1, min(k_tick, self._spec_cap_eff))
+            if k_tick > 1:
+                self._tick_window(k_tick)
+                ticks += 1
+                continue
             residency = None
             if self.res_mgr is not None:
                 residency = self.res_mgr.stacked_residency()
@@ -211,6 +261,10 @@ class ServingEngine:
                 self.scheduler.step_done(slot, toks[slot], now, self.eos)
                 if slot in self.scheduler.free_slots:
                     self.active[slot] = False
+                if self._spec_ok:
+                    # a plain tick is a size-1 window that accepted its token:
+                    # feedback that lets a fresh row's spec length grow
+                    self.scheduler.observe_accept(slot, 1, 1)
             self.stats.steps += 1
             self.stats.tokens += int(self.active.sum())
             if self.res_mgr is not None:
@@ -220,6 +274,106 @@ class ServingEngine:
         if self.stats.wall_s > 0 and self.stats.steps:
             self.scheduler.observe_rate(self.stats.steps / self.stats.wall_s)
         return self.scheduler.completed
+
+    # ------------------------------------------------------------------
+    def _tick_window(self, k: int) -> None:
+        """One speculative serving tick: ``k`` self-drafted positions for the
+        whole batch in ONE compiled program.
+
+        Per-row acceptance: a row commits drafted tokens up to (but not past)
+        its first residency miss — clamped to >= 1, since position 0 is
+        exactly what a plain tick would have computed (serving drops missed
+        experts in-step; it has no replay path). Rejected positions roll the
+        row's KV slots back (``tfm.rollback_kv_window`` takes per-row keep
+        counts for the ragged batch) and re-draft next window, after rotation
+        has had a chance to fix residency. Accept outcomes feed the
+        scheduler's per-row speculative lengths.
+        """
+        step_fn, snap_fn, roll_fn = self._window_fns(k)
+        residency = None
+        if self.res_mgr is not None:
+            residency = self.res_mgr.stacked_residency()
+        lengths = jnp.asarray(self.lengths)
+        saved = None
+        if self.res_mgr is not None:
+            # pre-window KV slot contents: misses may reject per-row suffixes
+            saved = snap_fn(self.state, lengths)
+            self.stats.device_dispatches += 1
+        draft, _logits, self.state, aux = step_fn(
+            self.params, self._routers_next,
+            jnp.asarray(self.next_token), self.state, lengths, residency,
+        )
+        self.stats.device_dispatches += 1
+        self.stats.spec_windows += 1
+        if self.res_mgr is not None:
+            for key, v in aux.items():
+                if key.startswith("route_") or key == "demand_next":
+                    v.copy_to_host_async()
+                    self.stats.overlapped_pulls += 1
+        draft_np = np.asarray(draft)           # [K, B]: THE queue-draining pull
+        self.stats.sync_pulls += 1
+        accepted = np.where(self.active, k, 0).astype(np.int32)
+        miss = None
+        if self.res_mgr is not None:
+            miss = concat_route_telemetry(aux, "miss", self._moe_segs, axis=1)
+            step_row_miss = miss.any(axis=(1, 3))               # [K, B]
+            any_miss = step_row_miss.any(axis=0)
+            first = np.where(any_miss, step_row_miss.argmax(axis=0), k)
+            accepted = np.where(
+                self.active, np.maximum(first, 1), 0
+            ).astype(np.int32)
+        # a finishing row commits only what it can still emit: drafting past
+        # max_new must not advance lengths or count as accepted throughput.
+        # ``offered`` = drafts the row could have used — the accept-rate
+        # denominator, so unused tail drafts don't read as rejections
+        offered: Dict[int, int] = {}
+        for slot, req in self.scheduler.running.items():
+            if self.active[slot]:
+                budget = req.max_new - len(req.output)
+                offered[slot] = min(k, budget)
+                accepted[slot] = min(int(accepted[slot]), budget)
+        if saved is not None and (accepted < k).any():
+            self.state = roll_fn(
+                self.state, saved, lengths, jnp.asarray(accepted)
+            )
+            self.stats.device_dispatches += 1
+        self.lengths += accepted
+        now = time.perf_counter()
+        fed_total = 0
+        for slot in list(self.scheduler.running.keys()):
+            if not self.active[slot]:
+                continue
+            a = int(accepted[slot])
+            fed = 0
+            for j in range(a):
+                tok = int(draft_np[j, slot])
+                self.next_token[slot] = tok
+                self.scheduler.step_done(slot, tok, now, self.eos)
+                fed += 1
+                if slot in self.scheduler.free_slots:
+                    self.active[slot] = False
+                    break
+            fed_total += fed
+            self.scheduler.observe_accept(slot, offered[slot], fed)
+            self.stats.drafted_tokens += offered[slot]
+            self.stats.accepted_tokens += fed
+        # 'steps' = sequential decode positions the batch committed (what the
+        # scheduler's tokens-per-row admission rate is derived from), not the
+        # k positions the program speculated over
+        self.stats.steps += int(accepted.max(initial=0))
+        self.stats.tokens += fed_total
+        if self.res_mgr is not None:
+            # rejected positions re-decode next window and are recorded THEN:
+            # per-row accepted counts mask them out of the hit/miss accounting
+            # and the demand-predictor EMA here
+            self.res_mgr.rotate_window_from_telemetry(
+                self.predictor,
+                concat_route_telemetry(aux, "ids", self._moe_segs, axis=1),
+                concat_route_telemetry(aux, "weights", self._moe_segs, axis=1),
+                miss,
+                np.asarray(aux["demand_next"]),
+                accepted=accepted,
+            )
 
     # ------------------------------------------------------------------
     def _rotate_from_aux(self, aux: Dict[str, jax.Array]) -> None:

@@ -1,11 +1,47 @@
 """Token samplers: greedy / temperature / top-k / top-p, pure numpy (host-side
-sampling keeps the compiled step deterministic and donation-friendly)."""
+sampling keeps the compiled step deterministic and donation-friendly), plus the
+speculative-decode ACCEPT rules (how many drafted tokens commit per window)."""
 from __future__ import annotations
 
 from dataclasses import dataclass
 from typing import Optional
 
 import numpy as np
+
+
+def greedy_accept(draft: np.ndarray, verify: np.ndarray) -> np.ndarray:
+    """Greedy speculative accept rule: per-row length of the agreeing prefix.
+
+    ``draft``/``verify`` are [K, B] token ids — the drafted window and the
+    verifier's argmaxes for the same positions. A position commits only if it
+    AND every earlier position agree (a disagreement invalidates everything
+    drafted after it). Self-drafting with identical weights verifies against
+    its own argmaxes, so this accepts the full window and rejection comes
+    only from residency misses — the call is the plug point for a separate
+    draft model. Returns accepted counts [B] in ``0..K``.
+    """
+    agree = np.cumprod(draft == verify, axis=0, dtype=np.int32)     # [K, B]
+    return agree.sum(axis=0).astype(np.int32)
+
+
+def stochastic_accept(
+    draft: np.ndarray,          # [K, B] drafted token ids
+    draft_probs: np.ndarray,    # [K, B] draft-time probability of each token
+    verify_probs: np.ndarray,   # [K, B, V] verifier distributions
+    rng: np.random.Generator,
+) -> np.ndarray:
+    """Hook for sampled speculative decoding (leftover-distribution rejection
+    sampling, Leviathan et al.): accept token t with prob min(1, q(t)/p(t))
+    and resample the first rejection from max(q - p, 0).
+
+    The engines run the GREEDY rule for now — sampled decode falls back to
+    single-token steps — but the signature is the committed interface so a
+    temperature > 0 path only has to fill this in.
+    """
+    raise NotImplementedError(
+        "stochastic speculative acceptance is a hook: engines currently "
+        "speculate only under greedy sampling (see greedy_accept)"
+    )
 
 
 @dataclass(frozen=True)

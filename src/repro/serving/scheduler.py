@@ -6,6 +6,10 @@ deadline are rejected up-front (or, if already running and past deadline,
 truncated at the next step boundary) instead of dragging the whole batch — a
 slow request in a synchronous decode batch is the serving analog of a straggler
 node.
+
+The scheduler also owns the per-ROW speculative-length policy: each slot's
+draft accept rate (fed back by the engine after every window) adapts how far
+that row may self-draft, so one misrouting row throttles only itself.
 """
 from __future__ import annotations
 
@@ -34,7 +38,9 @@ class Request:
 
 class Scheduler:
     def __init__(self, num_slots: int, *, est_tok_s: float = 20.0,
-                 est_prefill_tok_s: Optional[float] = None):
+                 est_prefill_tok_s: Optional[float] = None,
+                 spec_cap: int = 8, spec_low: float = 0.7,
+                 spec_high: float = 0.95):
         self.num_slots = num_slots
         self.queue: List = []
         self.running: Dict[int, Request] = {}       # slot -> request
@@ -47,6 +53,15 @@ class Scheduler:
         self.est_prefill_tok_s = (
             est_prefill_tok_s if est_prefill_tok_s is not None else 4 * est_tok_s
         )
+        # per-ROW learned speculative lengths: each slot tracks an EMA of its
+        # draft accept rate and adapts how far the engine may self-draft for
+        # that row — rows whose routing keeps missing residency shrink toward
+        # single-token decode, rows that accept everything grow toward the cap
+        self.spec_cap = max(1, spec_cap)
+        self.spec_low = spec_low
+        self.spec_high = spec_high
+        self._spec_len: Dict[int, int] = {}
+        self._accept_ema: Dict[int, float] = {}
         self.rejected: List[Request] = []
         self.completed: List[Request] = []
         self._uid = itertools.count()
@@ -95,6 +110,31 @@ class Scheduler:
     def observe_prefill_rate(self, tok_s: float) -> None:
         """Measured prefill tokens/s feedback (engine calls this per prefill)."""
         self.est_prefill_tok_s = 0.9 * self.est_prefill_tok_s + 0.1 * tok_s
+
+    # -- per-row speculative lengths --------------------------------------
+    def spec_len(self, slot: int) -> int:
+        """How far the engine may self-draft for this row (learned, >= 1)."""
+        return self._spec_len.get(slot, 1)
+
+    def observe_accept(self, slot: int, drafted: int, accepted: int) -> None:
+        """Fold one window's accept outcome for ``slot`` into its EMA and
+        adapt the row's speculative length: below ``spec_low`` the window
+        halves (a misrouting row should stop wasting drafted compute and let
+        rotation catch up every token), above ``spec_high`` it grows one step
+        toward ``spec_cap``. Deterministic — no wall clock involved — so
+        serving tests can drive it with a fake clock.
+        """
+        if drafted <= 0:
+            return
+        rate = accepted / drafted
+        ema = self._accept_ema.get(slot)
+        ema = rate if ema is None else 0.5 * ema + 0.5 * rate
+        self._accept_ema[slot] = ema
+        cur = self.spec_len(slot)
+        if ema < self.spec_low:
+            self._spec_len[slot] = max(1, cur // 2)
+        elif ema > self.spec_high:
+            self._spec_len[slot] = min(self.spec_cap, cur + 1)
 
     @property
     def idle(self) -> bool:

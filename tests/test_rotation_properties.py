@@ -1,5 +1,8 @@
 """Hypothesis property tests for the paper's core invariants:
-LUT bijectivity, rotation boundedness, window coverage, cyclic return."""
+LUT bijectivity, rotation boundedness, window coverage, cyclic return —
+plus the speculative-decode invariants: KV rollback (truncate-then-redecode
+== never-decoded) and window-deferred rotation (residency after a window ==
+residency after the same tokens applied one-by-one)."""
 import numpy as np
 import pytest
 
@@ -119,6 +122,136 @@ def test_cosine_self_similarity(n):
     v = np.random.default_rng(n).random(n) + 0.1
     assert abs(cosine(v, v) - 1.0) < 1e-9
     assert cosine(v, np.zeros(n)) == 0.0
+
+
+# ===========================================================================
+# speculative decode: KV rollback + window-deferred rotation
+# ===========================================================================
+class _KvStubCfg:
+    """Duck-typed stand-in: the KV window helpers only read ``segments``."""
+
+    def __init__(self, reps: int):
+        self.segments = ((("attn_moe",), reps), (("attn_mlp",), 1))
+
+
+@given(
+    cap=st.integers(3, 12),
+    c0=st.integers(0, 40),
+    k_steps=st.integers(1, 6),
+    keep_frac=st.floats(0.0, 1.0),
+    seed=st.integers(0, 10),
+)
+def test_kv_rollback_restores_rejected_slots(cap, c0, k_steps, keep_frac, seed):
+    """snapshot -> speculative writes -> rollback(keep) restores EXACTLY the
+    slots of offsets >= keep to their pre-window contents (previous-lap ring
+    entries included: c0 may lap the capacity many times over) and leaves the
+    accepted offsets' writes in place — truncate-then-redecode therefore
+    equals never-decoded."""
+    import jax
+    import jax.numpy as jnp
+    from repro.models import transformer as tfm
+
+    k_steps = min(k_steps, cap)
+    keep = int(round(keep_frac * k_steps))
+    cfg = _KvStubCfg(reps=2)
+    rng = np.random.default_rng(seed)
+    b, h, dh = 2, 2, 3
+
+    def fresh(tag):
+        return {
+            "k": jnp.asarray(rng.standard_normal((2, b, cap, h, dh)) + tag,
+                             jnp.float32),
+            "v": jnp.asarray(rng.standard_normal((2, b, cap, h, dh)) - tag,
+                             jnp.float32),
+        }
+
+    state = (( fresh(0), ), ( fresh(1), ))
+    before = [np.asarray(x) for x in jax.tree.leaves(state)]
+    saved = tfm.snapshot_kv_window(cfg, state, jnp.int32(c0), k_steps)
+    # speculative window: garbage into the slots positions c0..c0+K-1 own
+    slots = (c0 + np.arange(k_steps)) % cap
+    garbage = (
+        ( {n: state[0][0][n].at[:, :, slots].set(99.0) for n in ("k", "v")}, ),
+        ( {n: state[1][0][n].at[:, :, slots].set(77.0) for n in ("k", "v")}, ),
+    )
+    rolled = tfm.rollback_kv_window(
+        cfg, garbage, saved, jnp.int32(c0), k_steps, jnp.int32(keep)
+    )
+    after = [np.asarray(x) for x in jax.tree.leaves(rolled)]
+    garb = [np.asarray(x) for x in jax.tree.leaves(garbage)]
+    kept_slots = {int(s) for s in slots[:keep]}
+    # accepted offsets could share a slot with a restored one only if the
+    # window wrapped the capacity (k_steps <= cap forbids that), so the
+    # partition is exact: accepted slots hold the window's writes, every
+    # other slot holds its pre-window bits
+    for a, g, pre in zip(after, garb, before):
+        for s in range(cap):
+            want = g[:, :, s] if s in kept_slots else pre[:, :, s]
+            np.testing.assert_array_equal(a[:, :, s], want)
+
+
+@given(
+    k_steps=st.integers(1, 5),
+    miss_rate=st.floats(0.0, 0.5),
+    seed=st.integers(0, 6),
+)
+@settings(max_examples=10, deadline=None)
+def test_window_rotation_equals_one_by_one(k_steps, miss_rate, seed):
+    """Residency after rotate_window_from_telemetry == residency after the
+    same steps through rotate_from_telemetry one at a time: LUT, ring
+    position, predictor EMA, and the contents of every RESIDENT slot are
+    bit-identical, and the window path never moves more bytes (coalescing)."""
+    import jax
+
+    jax.config.update("jax_platform_name", "cpu")
+    from conftest import params_for
+    from repro.config import ResidencyConfig
+    from repro.core import DemandPredictor, RotaryResidencyManager
+
+    cfg, _ = params_for("qwen2-moe-a2.7b")
+    E, L, T, topk = cfg.moe.num_experts, 2, 3, cfg.moe.top_k
+    rng = np.random.default_rng(seed)
+
+    def mk():
+        r = np.random.default_rng(seed + 100)
+        hw = [
+            {n: r.standard_normal(s).astype(np.float32)
+             for n, s in (("w_gate", (E, 4, 3)), ("w_up", (E, 4, 3)),
+                          ("w_down", (E, 3, 4)))}
+            for _ in range(L)
+        ]
+        routers = [r.standard_normal((4, E)).astype(np.float32)
+                   for _ in range(L)]
+        mgr = RotaryResidencyManager(
+            cfg, ResidencyConfig(mode="rotary", num_slots=5), hw,
+            batch=1, cache_len=16, seed=11,
+        )
+        return mgr, DemandPredictor(routers)
+
+    m_seq, p_seq = mk()
+    m_win, p_win = mk()
+    ids = rng.integers(0, E, (k_steps, L, T, topk)).astype(np.int32)
+    w = rng.random((k_steps, L, T, topk)).astype(np.float32)
+    miss = rng.random((k_steps, L, T, topk)) < miss_rate
+    dem = rng.random((k_steps, L, E))
+    for s in range(k_steps):
+        m_seq.rotate_from_telemetry(p_seq, ids[s], w[s], miss[s], dem[s])
+    m_win.rotate_window_from_telemetry(p_win, ids, w, miss, dem)
+    for l in range(L):
+        np.testing.assert_array_equal(
+            m_seq.policies[l].lut.e2s, m_win.policies[l].lut.e2s
+        )
+        assert m_seq.policies[l].ring.pos == m_win.policies[l].ring.pos
+        np.testing.assert_array_equal(p_seq.smoothed[l], p_win.smoothed[l])
+        for s_ in range(m_seq.num_slots):
+            if int(m_seq.policies[l].lut.s2e[s_]) < 0:
+                continue
+            for n in m_seq.stores[l].buffers:
+                np.testing.assert_array_equal(
+                    np.asarray(m_seq.stores[l].buffers[n][s_]),
+                    np.asarray(m_win.stores[l].buffers[n][s_]),
+                )
+    assert m_win.stats.bytes_loaded <= m_seq.stats.bytes_loaded
 
 
 @given(

@@ -1,0 +1,293 @@
+"""Speculative multi-token decode on the fused step: the exactness harness.
+
+The suite proves (not assumes) the spec-window invariants:
+  * greedy tokens from spec-K decode (K in {2, 4, 8}) are bit-identical to the
+    single-token fused path AND the seed per-layer walk, across full / rotary
+    (prefetch-covered) / rotary-with-forced-misses;
+  * pull-count regression: <= ceil(T/K) + replayed_steps queue-draining pulls
+    per sequence (net of the replay machinery's own accounted reads), and
+    EXACTLY ceil(T/K) on the miss-free paths;
+  * accept/draft accounting: greedy self-drafting accepts everything miss-free
+    (accept_rate == 1.0 — the KV-rollback canary) and only misses reject;
+  * the KV rollback helper truncates bit-exactly (tier-1 mirror of the
+    hypothesis property in test_rotation_properties);
+  * window-deferred rotation leaves residency bit-identical to rotating after
+    every token (tier-1 mirror), while moving no MORE bytes over the link.
+"""
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import params_for
+from repro.config import ResidencyConfig
+from repro.core import DemandPredictor, RotaryEngine, RotaryResidencyManager
+from repro.models import init_params
+from repro.models import transformer as tfm
+from repro.models.transformer import Runtime
+
+
+def _f32_setup():
+    cfg, _ = params_for("qwen2-moe-a2.7b")
+    cfg = dataclasses.replace(cfg, dtype="float32")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _engine(cfg, params, mode, slots, **kw):
+    return RotaryEngine(
+        cfg, params, ResidencyConfig(mode=mode, num_slots=slots, prefetch_margin=2),
+        rt=Runtime(cache_len=64), batch=2, **kw,
+    )
+
+
+# ===========================================================================
+# exactness: spec-K == single-token fused == seed walk, every residency mode
+# ===========================================================================
+@pytest.mark.parametrize("spec_k", [2, 4, 8])
+def test_spec_decode_exact_all_modes(rng, spec_k):
+    """Greedy tokens from speculative windows are bit-identical to the
+    single-token fused path and to the seed-style per-layer walk under full
+    residency, prefetch-covered rotary, AND a slot-starved rotary engine
+    whose misses force KV rollback + replay on nearly every window."""
+    cfg, params = _f32_setup()
+    prompt = rng.integers(0, 200, (2, 8)).astype(np.int32)
+    T = 10
+    e = cfg.moe.num_experts
+    for mode, slots in (("full", 0), ("rotary", e), ("rotary", 5)):
+        seed_walk = _engine(cfg, params, mode, slots, host_routing=True)
+        fused = _engine(cfg, params, mode, slots)
+        spec = _engine(cfg, params, mode, slots, spec_k=spec_k)
+        ref = seed_walk.generate(prompt, T)
+        np.testing.assert_array_equal(
+            ref, fused.generate(prompt, T), err_msg=f"{mode}/{slots} fused"
+        )
+        np.testing.assert_array_equal(
+            ref, spec.generate(prompt, T),
+            err_msg=f"{mode}/{slots} spec_k={spec_k}",
+        )
+        assert spec._fused_decode and spec.stats.spec_windows > 0
+        if slots == 5:
+            # the starved config actually exercised rollback + replay
+            assert spec.stats.replayed_steps > 0
+            assert spec.stats.misses > 0
+            assert spec.stats.accepted_tokens < spec.stats.drafted_tokens
+        # mechanism parity: every counted miss was host-corrected
+        s = spec.stats
+        assert sum(l.host_computed for l in s.layers.values()) == s.misses
+
+
+def test_spec_matches_chained_decodes(rng):
+    """Window state carries across decode() calls: chained spec decodes from
+    ``last_logits`` continue the exact greedy sequence."""
+    cfg, params = _f32_setup()
+    prompt = rng.integers(0, 200, (2, 8)).astype(np.int32)
+    ref = _engine(cfg, params, "rotary", 5).generate(prompt, 12)
+    eng = _engine(cfg, params, "rotary", 5, spec_k=4)
+    logits = eng.prefill(prompt)
+    a = eng.decode(logits, 7)
+    b = eng.decode(eng.last_logits, 5)
+    np.testing.assert_array_equal(ref, np.concatenate([a, b], axis=1))
+
+
+# ===========================================================================
+# pull-count regression
+# ===========================================================================
+def test_spec_pull_count_miss_free(rng):
+    """Miss-free spec decode: EXACTLY ceil(T/K) queue-draining pulls (and
+    compiled-program launches) for T tokens — the window amortizes the
+    per-token pull the fused single-token path was bounded by."""
+    cfg, params = _f32_setup()
+    prompt = rng.integers(0, 200, (2, 8)).astype(np.int32)
+    for T, K in ((12, 4), (10, 4), (12, 2)):
+        eng = _engine(cfg, params, "full", 0, spec_k=K)
+        logits = eng.prefill(prompt)
+        pulls0, disp0 = eng.stats.sync_pulls, eng.stats.device_dispatches
+        eng.decode(logits, T)
+        want = math.ceil(T / K)
+        assert eng.stats.sync_pulls - pulls0 == want, (T, K)
+        assert eng.stats.device_dispatches - disp0 == want, (T, K)
+        assert eng.stats.misses == 0
+
+
+def test_spec_pull_count_with_replays(rng):
+    """Slot-starved spec decode: window-level queue-draining pulls (sync
+    pulls net of the replay machinery's own accounted reads) stay within
+    ceil(T/K) + replayed_steps — every replayed window still commits at
+    least one token, so rejection cannot blow up the pull budget."""
+    cfg, params = _f32_setup()
+    prompt = rng.integers(0, 200, (2, 8)).astype(np.int32)
+    T, K = 12, 4
+    eng = _engine(cfg, params, "rotary", 5, spec_k=K)
+    logits = eng.prefill(prompt)
+    pulls0, rp0 = eng.stats.sync_pulls, eng.stats.replay_pulls
+    eng.decode(logits, T)
+    window_pulls = (eng.stats.sync_pulls - pulls0) - (eng.stats.replay_pulls - rp0)
+    assert eng.stats.replayed_steps > 0          # the bound is exercised
+    assert window_pulls <= math.ceil(T / K) + eng.stats.replayed_steps
+
+
+# ===========================================================================
+# accept/draft counters
+# ===========================================================================
+def test_spec_accept_rate_miss_free_is_one(rng):
+    """Greedy self-drafting with identical weights must accept EVERY drafted
+    token when no residency miss occurs — accept_rate < 1.0 here would mean
+    the KV rollback / replay machinery corrupted the window state."""
+    cfg, params = _f32_setup()
+    prompt = rng.integers(0, 200, (2, 8)).astype(np.int32)
+    eng = _engine(cfg, params, "full", 0, spec_k=4)
+    eng.generate(prompt, 12)
+    assert eng.stats.drafted_tokens == 12
+    assert eng.stats.accepted_tokens == eng.stats.drafted_tokens
+    assert eng.stats.accept_rate >= 1.0
+
+
+def test_greedy_accept_rule():
+    """The sampler-level accept rule: longest agreeing prefix, per row."""
+    from repro.serving.sampler import greedy_accept, stochastic_accept
+
+    draft = np.array([[1, 5], [2, 6], [3, 7]], np.int32)          # [K=3, B=2]
+    verify = np.array([[1, 5], [2, 9], [3, 7]], np.int32)
+    np.testing.assert_array_equal(greedy_accept(draft, verify), [3, 1])
+    np.testing.assert_array_equal(greedy_accept(draft, draft), [3, 3])
+    # position 0 disagreement rejects the whole window for that row
+    verify0 = verify.copy(); verify0[0, 0] = 99
+    np.testing.assert_array_equal(greedy_accept(draft, verify0), [0, 1])
+    with pytest.raises(NotImplementedError):
+        stochastic_accept(draft, np.ones((3, 2)), np.ones((3, 2, 8)),
+                          np.random.default_rng(0))
+
+
+def test_spec_k_validation():
+    cfg, params = _f32_setup()
+    with pytest.raises(AssertionError):
+        _engine(cfg, params, "lru", 5, spec_k=4)          # LRU: no fused path
+    with pytest.raises(AssertionError):
+        _engine(cfg, params, "rotary", 5, host_routing=True, spec_k=4)
+    with pytest.raises(AssertionError):
+        _engine(cfg, params, "full", 0, spec_k=65)        # > cache capacity
+
+
+def test_spec_falls_back_for_sampled_decode(rng):
+    """Non-greedy decode has no accept rule yet (stochastic hook only):
+    a spec engine silently falls back to exact single-token fused steps."""
+    cfg, params = _f32_setup()
+    prompt = rng.integers(0, 200, (2, 8)).astype(np.int32)
+    eng = _engine(cfg, params, "full", 0, spec_k=4)
+    logits = eng.prefill(prompt)
+    out = eng.decode(logits, 4, greedy=False, seed=3)
+    assert out.shape == (2, 4)
+    assert eng.stats.spec_windows == 0
+    ref = _engine(cfg, params, "full", 0)
+    logits = ref.prefill(prompt)
+    np.testing.assert_array_equal(out, ref.decode(logits, 4, greedy=False, seed=3))
+
+
+# ===========================================================================
+# tier-1 mirrors of the hypothesis properties
+# ===========================================================================
+def test_kv_rollback_truncate_then_redecode():
+    """tfm.rollback_kv_window: truncate-then-redecode == never-decoded, for
+    both full and ring (windowed) caches, at several keep points."""
+    cfg, _ = params_for("qwen2-moe-a2.7b")
+    batch, cache_len, c0, K = 2, 16, 6, 4
+
+    def write(state, pos, tag):
+        """Deterministic stand-in for a decode step's KV write at ``pos``."""
+        segs = []
+        for si, (unit, reps) in enumerate(cfg.segments):
+            unit_new = []
+            for pi, kind in enumerate(unit):
+                st = state[si][pi]
+                if kind in tfm._KV_KINDS:
+                    def put(c):
+                        cap = c.shape[2]
+                        val = jnp.full(c.shape[-2:], tag * 1000 + pos, c.dtype)
+                        return c.at[:, :, pos % cap].set(val)
+                    st = jax.tree.map(put, st)
+                unit_new.append(st)
+            segs.append(tuple(unit_new))
+        return tuple(segs)
+
+    def leaves(state):
+        return [np.asarray(x) for x in jax.tree.leaves(state)]
+
+    for keep in (0, 2, 4):
+        state = tfm.zero_state(cfg, batch, cache_len)
+        for p in range(c0):
+            state = write(state, p, tag=1)              # committed history
+        saved = tfm.snapshot_kv_window(cfg, state, jnp.int32(c0), K)
+        for j in range(K):
+            state = write(state, c0 + j, tag=7)         # speculative window
+        state = tfm.rollback_kv_window(
+            cfg, state, saved, jnp.int32(c0), K, jnp.int32(keep)
+        )
+        for p in range(c0 + keep, c0 + K):
+            state = write(state, p, tag=1)              # redecode the suffix
+        ref = tfm.zero_state(cfg, batch, cache_len)
+        for p in range(c0 + K):
+            ref = write(ref, p, tag=1)                  # never speculated
+        # accepted window positions keep their (tag=7) speculative writes;
+        # neutralize them in both trees before comparing the rest
+        for p in range(c0, c0 + keep):
+            state = write(state, p, tag=0)
+            ref = write(ref, p, tag=0)
+        for a, b in zip(leaves(state), leaves(ref)):
+            np.testing.assert_array_equal(a, b)
+
+
+def test_window_rotation_matches_sequential():
+    """rotate_window_from_telemetry leaves residency (LUT, ring position,
+    resident slot contents, predictor EMA) bit-identical to feeding the same
+    steps through rotate_from_telemetry one at a time — while never moving
+    MORE bytes (uploads coalesce to the last write per slot)."""
+    cfg, _ = params_for("qwen2-moe-a2.7b")
+    E, L, T, k, K = cfg.moe.num_experts, 2, 4, cfg.moe.top_k, 4
+    rng = np.random.default_rng(3)
+
+    def mk(seed):
+        r = np.random.default_rng(seed)
+        hw = [
+            {n: r.standard_normal(s).astype(np.float32)
+             for n, s in (("w_gate", (E, 4, 3)), ("w_up", (E, 4, 3)),
+                          ("w_down", (E, 3, 4)))}
+            for _ in range(L)
+        ]
+        routers = [r.standard_normal((4, E)).astype(np.float32) for _ in range(L)]
+        mgr = RotaryResidencyManager(
+            cfg, ResidencyConfig(mode="rotary", num_slots=5), hw,
+            batch=1, cache_len=16, seed=7,
+        )
+        return mgr, DemandPredictor(routers)
+
+    m_seq, p_seq = mk(1)
+    m_win, p_win = mk(1)
+    ids = rng.integers(0, E, (K, L, T, k)).astype(np.int32)
+    w = rng.random((K, L, T, k)).astype(np.float32)
+    miss = rng.random((K, L, T, k)) < 0.2
+    dem = rng.random((K, L, E))
+    for s in range(K):
+        m_seq.rotate_from_telemetry(p_seq, ids[s], w[s], miss[s], dem[s])
+    m_win.rotate_window_from_telemetry(p_win, ids, w, miss, dem)
+    for l in range(L):
+        np.testing.assert_array_equal(
+            m_seq.policies[l].lut.e2s, m_win.policies[l].lut.e2s
+        )
+        assert m_seq.policies[l].ring.pos == m_win.policies[l].ring.pos
+        np.testing.assert_array_equal(p_seq.smoothed[l], p_win.smoothed[l])
+        for s_ in range(m_seq.num_slots):
+            e = int(m_seq.policies[l].lut.s2e[s_])
+            if e < 0:
+                continue
+            for n in m_seq.stores[l].buffers:
+                np.testing.assert_array_equal(
+                    np.asarray(m_seq.stores[l].buffers[n][s_]),
+                    np.asarray(m_win.stores[l].buffers[n][s_]),
+                )
+        assert m_seq.stats.layer(l).hits == m_win.stats.layer(l).hits
+        assert m_seq.stats.layer(l).misses == m_win.stats.layer(l).misses
+    assert m_win.stats.bytes_loaded <= m_seq.stats.bytes_loaded

@@ -1,0 +1,53 @@
+"""Print the tier-1 pass-count delta vs the number recorded in CHANGES.md.
+
+Usage: python tools/tier1_delta.py <pytest-log> <CHANGES.md>
+
+The CHANGES.md convention is that each PR entry's tail records the tier-1
+result as ``Tier-1: N passed``; ``make tier1`` tees the pytest output through
+this script so every local run reports where the suite stands relative to the
+last landed PR (a negative delta = regressions, a positive one = the new
+coverage this PR adds).
+"""
+from __future__ import annotations
+
+import re
+import sys
+
+
+def latest_passed(text: str) -> int:
+    """Last ``N passed`` occurrence in a pytest summary (0 if none)."""
+    hits = re.findall(r"(\d+) passed", text)
+    return int(hits[-1]) if hits else 0
+
+
+def recorded_passed(changes: str) -> int:
+    """The most recent ``Tier-1: N passed`` recorded in CHANGES.md (its tail
+    convention: newest entry first, so the first match wins)."""
+    for line in changes.splitlines():
+        m = re.search(r"Tier-1:\s*(\d+) passed", line)
+        if m:
+            return int(m.group(1))
+    return 0
+
+
+def main() -> None:
+    if len(sys.argv) != 3:
+        sys.exit(f"usage: {sys.argv[0]} <pytest-log> <CHANGES.md>")
+    try:
+        log = open(sys.argv[1]).read()
+    except OSError as e:
+        sys.exit(f"tier1_delta: cannot read pytest log: {e}")
+    try:
+        changes = open(sys.argv[2]).read()
+    except OSError:
+        changes = ""
+    cur = latest_passed(log)
+    prev = recorded_passed(changes)
+    print(
+        f"tier1: {cur} passed ({cur - prev:+d} vs the {prev} recorded in "
+        f"CHANGES.md)"
+    )
+
+
+if __name__ == "__main__":
+    main()
