@@ -3,7 +3,7 @@ PYTHON ?= python
 SHELL := /bin/bash
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: dev-deps tier1 ci bench bench-decode
+.PHONY: dev-deps tier1 ci bench bench-decode smoke-int4
 
 dev-deps:          ## install test-only deps (hypothesis property coverage)
 	$(PYTHON) -m pip install -r requirements-dev.txt
@@ -13,11 +13,17 @@ tier1:             ## the ROADMAP tier-1 gate (skips hypothesis modules if absen
 	@set -o pipefail; $(PYTHON) -m pytest -x -q 2>&1 | tee .tier1.log; st=$$?; \
 	$(PYTHON) tools/tier1_delta.py .tier1.log CHANGES.md; exit $$st
 
-ci: dev-deps tier1 ## "green" in one command: dev deps + full tier-1 run
+smoke-int4:        ## fast packed-path smoke: rotary decode + spec windows on
+                   ## grouped-int4 slots (reduced config, a few tokens)
+	$(PYTHON) -m repro.launch.serve --arch qwen2-moe-a2.7b --engine rotary \
+	  --residency rotary --quantization int4 --batch 2 --requests 2 \
+	  --prompt-len 8 --max-new 4 --spec-k 2 --cache-len 64
+
+ci: dev-deps tier1 smoke-int4 ## "green" in one command: dev deps + tier-1 + int4 smoke
 
 bench:             ## all paper-table / kernel / hot-path benchmarks (emits BENCH_decode.json)
 	$(PYTHON) -m benchmarks.run
 
 bench-decode:      ## decode hot-path micro-benchmark incl. the speculative
-                   ## spec[K] row family (appends spec rows to BENCH_decode.json)
-	$(PYTHON) -m benchmarks.decode_hot_path --spec-k 2,4,8
+                   ## spec[K] and quantized @int8/@int4 row families
+	$(PYTHON) -m benchmarks.decode_hot_path --spec-k 2,4,8 --quantization int8,int4

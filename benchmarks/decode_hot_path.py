@@ -12,7 +12,10 @@ reduced config:
   on-device demand prediction, batched slot uploads);
 * ``spec[K]`` — speculative self-drafting windows on the fused step: K tokens
   per compiled launch and per queue-draining pull, rotation at window
-  boundaries (``--spec-k`` grows the row family).
+  boundaries (``--spec-k`` grows the row family);
+* ``@int8 / @int4`` — quantized slot-store row family (``--quantization``):
+  the fused and spec-4 paths re-run with int8 / grouped-int4 slots so the
+  f16-vs-int8-vs-int4 link traffic (MB/token) is visible side by side.
 
 Acceptance checks: (a) greedy tokens IDENTICAL across all paths under every
 residency mode (misses replay-corrected exactly; spec windows roll back +
@@ -22,12 +25,16 @@ ONE queue-draining device->host pull AND one compiled-program launch per token
 — and miss-free spec-K decode exactly 1/K of each, (d) the fused step beats
 the per-layer hot path >= 1.3x miss-free, and spec-4 beats the fused
 single-token path >= 1.2x miss-free, (e) greedy self-drafting accepts every
-drafted token miss-free (accept_rate >= 1.0 — the KV-rollback canary).
+drafted token miss-free (accept_rate >= 1.0 — the KV-rollback canary),
+(f) quantized decode is exactness-clean WITHIN its format — greedy tokens
+bit-identical between full residency, rotary, and rotary+spec-4 under int8
+and int4 alike (host corrections run against the dequantized weights) — and
+the int4 store moves <= 0.30x the f16 bytes per rotated expert.
 
-Run directly (``python -m benchmarks.decode_hot_path [--spec-k 2,4,8]``) or
-via ``python -m benchmarks.run`` / ``make bench-decode``; either way the row
-data lands in ``BENCH_decode.json`` so the perf trajectory accumulates across
-PRs.
+Run directly (``python -m benchmarks.decode_hot_path [--spec-k 2,4,8]
+[--quantization int8,int4]``) or via ``python -m benchmarks.run`` /
+``make bench-decode``; either way the row data lands in ``BENCH_decode.json``
+so the perf trajectory accumulates across PRs.
 """
 from __future__ import annotations
 
@@ -44,14 +51,16 @@ PATHS = ("seed", "layer", "fused")
 
 
 def _run_engine(cfg, params, mode: str, slots: int, path: str,
-                prompt: np.ndarray, steps: int) -> Dict:
+                prompt: np.ndarray, steps: int,
+                quant: str | None = None) -> Dict:
     from repro.config import ResidencyConfig
     from repro.core import RotaryEngine
     from repro.models.transformer import Runtime
 
     spec_k = int(path[4:]) if path.startswith("spec") else 1
     eng = RotaryEngine(
-        cfg, params, ResidencyConfig(mode=mode, num_slots=slots),
+        cfg, params,
+        ResidencyConfig(mode=mode, num_slots=slots, quantization=quant),
         rt=Runtime(cache_len=max(128, prompt.shape[1] + steps + 8)),
         batch=prompt.shape[0],
         host_routing=(path == "seed"),
@@ -65,6 +74,7 @@ def _run_engine(cfg, params, mode: str, slots: int, path: str,
     eng.decode(logits, 2)
     pulls0 = eng.stats.sync_pulls
     disp0 = eng.stats.device_dispatches
+    bytes0 = eng.stats.bytes_uploaded
     # best-of-3 timing: single 16-step samples are noisy on a shared host and
     # this benchmark gates a >=1.3x acceptance; tokens from every repeat still
     # feed the cross-path identity check
@@ -80,10 +90,12 @@ def _run_engine(cfg, params, mode: str, slots: int, path: str,
         "s_per_step": min(walls) / steps,
         "sync_pulls_per_step": (eng.stats.sync_pulls - pulls0) / timed,
         "dispatches_per_step": (eng.stats.device_dispatches - disp0) / timed,
+        "mb_per_token": (eng.stats.bytes_uploaded - bytes0) / 2**20 / timed,
     }
 
 
-def run(steps: int = 16, spec_ks: Sequence[int] = (2, 4, 8)) -> Dict:
+def run(steps: int = 16, spec_ks: Sequence[int] = (2, 4, 8),
+        quants: Sequence[str] = ("int8", "int4")) -> Dict:
     from repro.config import get_config
     from repro.configs import reduce_for_smoke
     from repro.models import init_params
@@ -151,6 +163,46 @@ def run(steps: int = 16, spec_ks: Sequence[int] = (2, 4, 8)) -> Dict:
         assert rows[f"spec{k}_full"]["dispatches_per_step"] == 1.0 / k
         # slot-starved spec windows actually rolled back and replayed
         assert rows[f"spec{k}_rotary"]["engine"].stats.replayed_steps > 0
+
+    # ---- quantized row family: link traffic + within-format exactness -----
+    for quant in quants:
+        for suffix, mode, slots in (
+            ("rotary", "rotary", 6),
+            ("rotary_hi", "rotary", e),
+            ("full", "full", 0),
+        ):
+            rows[f"fused_{suffix}@{quant}"] = _run_engine(
+                cfg, params, mode, slots, "fused", prompt, steps, quant=quant
+            )
+        rows[f"spec4_rotary_hi@{quant}"] = _run_engine(
+            cfg, params, "rotary", e, "spec4", prompt, steps, quant=quant
+        )
+        rows[f"spec4_rotary@{quant}"] = _run_engine(
+            cfg, params, "rotary", 6, "spec4", prompt, steps, quant=quant
+        )
+        # (f) quantized decode is exactness-clean WITHIN its format: full
+        # residency, slot-starved rotary (host-corrected misses), prefetch-
+        # covered rotary and rotary+spec-4 agree token-for-token
+        base = rows[f"fused_full@{quant}"]["tokens"]
+        for label in (f"fused_rotary@{quant}", f"fused_rotary_hi@{quant}",
+                      f"spec4_rotary_hi@{quant}", f"spec4_rotary@{quant}"):
+            np.testing.assert_array_equal(base, rows[label]["tokens"], err_msg=label)
+        # the slot-starved quant row actually exercised quantized replay
+        assert rows[f"fused_rotary@{quant}"]["engine"].stats.misses > 0
+    if "int4" in quants:
+        # (f) the int4 store ships <= 0.30x the f16 bytes per rotated expert
+        # (packed nibbles + f16 group scale/min planes vs 2 bytes/element)
+        from repro.core.slots import quantized_expert_bytes
+
+        eng4 = rows["fused_rotary@int4"]["engine"]
+        store = eng4.manager.stores[0]
+        f16_bytes = quantized_expert_bytes(
+            {n: w.shape[1:] for n, w in eng4.host_experts[0].items()},
+            None, dtype_bytes=2,
+        )
+        ratio = store.bytes_per_expert / f16_bytes
+        assert ratio <= 0.30, f"int4 bytes/expert {ratio:.3f}x f16 exceeds 0.30x"
+        rows["int4_bytes_ratio_vs_f16"] = ratio
     return rows
 
 
@@ -158,22 +210,33 @@ def main(argv: Sequence[str] | None = None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--spec-k", default="2,4,8",
                     help="comma-separated speculative window sizes to row out")
+    ap.add_argument("--quantization", default="int8,int4",
+                    help="comma-separated slot formats for the quantized row "
+                         "family (subset of int8,int4; empty disables)")
     ap.add_argument("--steps", type=int, default=16)
     args = ap.parse_args(argv)
     spec_ks: Tuple[int, ...] = tuple(
         int(t) for t in args.spec_k.split(",") if t.strip()
     )
     assert 4 in spec_ks, "the >=1.2x acceptance gate is pinned at K=4"
+    quants: Tuple[str, ...] = tuple(
+        t for t in args.quantization.split(",") if t.strip() and t != "none"
+    )
+    assert all(q in ("int8", "int4") for q in quants), quants
     steps = args.steps
-    rows = run(steps, spec_ks)
+    rows = run(steps, spec_ks, quants)
     spec_paths = tuple(f"spec{k}" for k in spec_ks)
     order = [f"{p}_{s}" for s in ("full", "rotary_hi", "rotary")
              for p in PATHS + spec_paths]
+    order += [f"fused_{s}@{q}" for q in quants
+              for s in ("full", "rotary_hi", "rotary")]
+    order += [f"spec4_{s}@{q}" for q in quants for s in ("rotary_hi", "rotary")]
     for label in order:
         r = rows[label]
-        print(f"  {label:16s} {r['s_per_step']*1e3:8.2f} ms/step  "
+        print(f"  {label:22s} {r['s_per_step']*1e3:8.2f} ms/step  "
               f"sync_pulls/step={r['sync_pulls_per_step']:.1f}  "
-              f"dispatches/step={r['dispatches_per_step']:.1f}")
+              f"dispatches/step={r['dispatches_per_step']:.1f}  "
+              f"MB/token={r['mb_per_token']:.3f}")
     speedups = {}
     for suffix in ("full", "rotary_hi"):
         layer = rows[f"layer_{suffix}"]["s_per_step"]
@@ -205,6 +268,19 @@ def main(argv: Sequence[str] | None = None) -> None:
     print(f"decode_hot_path,accept_rate_spec4_full,"
           f"{rows['spec4_full']['engine'].stats.accept_rate:.3f}")
     print("decode_hot_path,tokens_identical,1")
+    if quants:
+        # link traffic: the slot-starved rotary workload (the regime that
+        # actually rotates every window) priced in each slot format, MB per
+        # decoded token — the f16-vs-int8-vs-int4 shrink in one column
+        for q in quants:
+            print(f"decode_hot_path,mb_per_token_fused_rotary_{q},"
+                  f"{rows[f'fused_rotary@{q}']['mb_per_token']:.4f}")
+        print(f"decode_hot_path,mb_per_token_fused_rotary_f32,"
+              f"{rows['fused_rotary']['mb_per_token']:.4f}")
+    if "int4" in quants:
+        print(f"decode_hot_path,int4_bytes_ratio_vs_f16,"
+              f"{rows['int4_bytes_ratio_vs_f16']:.4f}")
+        print("decode_hot_path,int4_tokens_identical,1")
     payload = {
         "config": "qwen2_moe_a2_7b_reduced_f32",
         "steps_timed": steps,
@@ -213,6 +289,7 @@ def main(argv: Sequence[str] | None = None) -> None:
                 "ms_per_step": rows[label]["s_per_step"] * 1e3,
                 "sync_pulls_per_step": rows[label]["sync_pulls_per_step"],
                 "dispatches_per_step": rows[label]["dispatches_per_step"],
+                "mb_per_token": rows[label]["mb_per_token"],
                 "misses": int(rows[label]["engine"].stats.misses),
                 "replayed_steps": int(rows[label]["engine"].stats.replayed_steps),
                 "drafted_tokens": int(rows[label]["engine"].stats.drafted_tokens),
@@ -224,6 +301,9 @@ def main(argv: Sequence[str] | None = None) -> None:
         "speedups": speedups,
         "tokens_identical": True,
     }
+    if "int4" in quants:
+        payload["int4_bytes_ratio_vs_f16"] = rows["int4_bytes_ratio_vs_f16"]
+        payload["int4_tokens_identical"] = True
     with open("BENCH_decode.json", "w") as f:
         json.dump(payload, f, indent=2)
     print("  wrote BENCH_decode.json")

@@ -38,12 +38,14 @@ def run(tokens_out: int = 128, quant: str | None = "int8") -> Dict:
 
     # ---- full-arch modeled numbers on the TPU target -------------------
     cost = CostModel()
+    from repro.quant import bytes_per_element
+
     m = full_cfg.moe
     mats = 3
-    dtype_b = 1 if quant == "int8" else 2
+    dtype_b = bytes_per_element(quant, 2, res.quant_group_size)
     active = analytic_params(full_cfg, active_only=True)
     static = active - m.top_k * mats * full_cfg.d_model * m.expert_d_ff
-    expert_bytes = mats * full_cfg.d_model * m.expert_d_ff * dtype_b
+    expert_bytes = int(mats * full_cfg.d_model * m.expert_d_ff * dtype_b)
     hit = s["hit_rate"]
     # per token: static weights + resident expert reads on device; misses on host
     flops = 2.0 * active

@@ -2,8 +2,9 @@
 
 The paper's central trade-off: how far can device residency shrink before the
 miss/transfer tax erases the memory win? Sweeps num_slots on the reduced paper
-arch under the rotary policy and prints the frontier, plus the int8 (Q4_K_M
-analog) variant that halves slot bytes at equal slot count.
+arch under the rotary policy and prints the frontier, plus the int8 and
+grouped-int4 (Q4_K_M analog) variants that shrink slot bytes ~2x / ~4x at
+equal slot count.
 
     PYTHONPATH=src python examples/offload_sweep.py
 """
@@ -24,7 +25,7 @@ def main():
     e = cfg.moe.num_experts
     print(f"{'slots':>5} | {'quant':>5} | {'hit':>6} | {'MB moved':>8} | "
           f"{'slot MB':>8} | {'model ms/tok':>12}")
-    for quant in (None, "int8"):
+    for quant in (None, "int8", "int4"):
         for slots in (e, 6, 5, 4, 3):
             try:
                 eng = RotaryEngine(

@@ -193,13 +193,20 @@ class ResidencyConfig:
     pin_shared: bool = True             # shared experts occupy pinned slots
     hbm_budget_bytes: Optional[int] = None
     host_compute_misses: bool = True    # paper's n-cpu-moe: misses run on host
-    quantization: Optional[str] = None  # None | "int8" (Q4_K_M analog; DESIGN.md §2)
+    # None | "int8" (per-channel) | "int4" (grouped two-nibbles-per-byte with
+    # per-group f16 scale+min — the Q4_K_M analog; repro.quant)
+    quantization: Optional[str] = None
+    quant_group_size: int = 64          # int4 rows per scale/min group
 
     def __post_init__(self) -> None:
         if self.mode not in ("full", "rotary", "lru", "static"):
             raise ValueError(f"unknown residency mode {self.mode!r}")
         if self.granularity not in ("expert", "layer"):
             raise ValueError(f"unknown granularity {self.granularity!r}")
+        if self.quantization not in (None, "int8", "int4"):
+            raise ValueError(f"unknown quantization {self.quantization!r}")
+        if self.quant_group_size < 2 or self.quant_group_size % 2:
+            raise ValueError("quant_group_size must be an even integer >= 2")
 
 
 @dataclass(frozen=True)

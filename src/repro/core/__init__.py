@@ -14,6 +14,17 @@ from repro.core.residency import (  # noqa: F401
     check_feasibility,
 )
 from repro.core.rotation import RotaryRing  # noqa: F401
-from repro.core.slots import SlotStore, dequantize_int8, quantize_int8  # noqa: F401
+from repro.core.slots import (  # noqa: F401
+    SlotStore,
+    dequantize_int8,
+    fake_quantized_batch,
+    quantize_int8,
+    quantized_expert_bytes,
+)
+from repro.quant import (  # noqa: F401
+    dequantize_int4,
+    quantize_int4,
+    quantize_int4_batch,
+)
 from repro.core.stats import EngineStats  # noqa: F401
 from repro.core.transfer import CostModel, TransferClock  # noqa: F401

@@ -347,6 +347,9 @@ class RotaryEngine:
             if k in params
         }
 
+        # per-layer cache for the quantized host-correction weights (built
+        # lazily by _correction_weights on a layer's first miss)
+        self._correct_cache: Dict[int, Dict[str, np.ndarray]] = {}
         self.predictor = DemandPredictor(routers, ema=rescfg.predictor_ema)
         self.manager = RotaryResidencyManager(
             cfg, rescfg, self.host_experts,
@@ -509,6 +512,29 @@ class RotaryEngine:
     # ------------------------------------------------------------------
     # shared host-side pieces
     # ------------------------------------------------------------------
+    def _correction_weights(self, moe_li: int) -> Dict[str, np.ndarray]:
+        """Host weights the miss correction must GEMM against: the originals,
+        or — under quantization — dequant(quant(w)) through the store's exact
+        jnp ops, so the correction is bit-consistent with what a RESIDENT slot
+        would have computed. Built lazily per layer on first miss (a covered
+        or full-residency engine never pays the pass or the f32 copy)."""
+        if self.rescfg.quantization is None:
+            return self.host_experts[moe_li]
+        hw = self._correct_cache.get(moe_li)
+        if hw is None:
+            from repro.core.slots import fake_quantized_batch
+
+            dtype = jnp.dtype(self.cfg.dtype)
+            hw = {
+                n: fake_quantized_batch(
+                    w, self.rescfg.quantization, dtype,
+                    self.rescfg.quant_group_size,
+                )
+                for n, w in self.host_experts[moe_li].items()
+            }
+            self._correct_cache[moe_li] = hw
+        return hw
+
     def _host_correct(
         self,
         x: jax.Array,
@@ -518,10 +544,11 @@ class RotaryEngine:
         weights: np.ndarray,
         miss: np.ndarray,
     ) -> jax.Array:
-        """Seed-style exact host GEMM correction for missed experts."""
+        """Seed-style exact host GEMM correction for missed experts (against
+        the dequantized weights when the slots are quantized)."""
         h2_np = np.asarray(h2, np.float32).reshape(ids.shape[0], -1)
         corr = np.zeros_like(h2_np)
-        hw = self.host_experts[moe_li]
+        hw = self._correction_weights(moe_li)
         n_host = 0
         for t_i, j in zip(*np.nonzero(miss)):
             e = int(ids[t_i, j])

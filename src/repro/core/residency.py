@@ -17,7 +17,12 @@ import numpy as np
 
 from repro.config.base import ModelConfig, ResidencyConfig
 from repro.core.policies import ResidencyPolicy, make_policy
-from repro.core.slots import SlotStore, scatter_set, scatter_set_donated
+from repro.core.slots import (
+    SlotStore,
+    quantized_expert_bytes,
+    scatter_set,
+    scatter_set_donated,
+)
 from repro.core.stats import EngineStats
 from repro.core.transfer import CostModel, TransferClock
 
@@ -73,8 +78,12 @@ def check_feasibility(
     m = cfg.moe
     moe_layers = sum(1 for k in cfg.layer_kinds if k == "attn_moe")
     mats = 3 if cfg.mlp == "swiglu" else 2
-    expert_bytes = mats * cfg.d_model * m.expert_d_ff * (
-        1 if rescfg.quantization == "int8" else dtype_bytes
+    # exact packed bytes per expert (int4 includes its group scale/min planes)
+    shapes = {"w_up": (cfg.d_model, m.expert_d_ff), "w_down": (m.expert_d_ff, cfg.d_model)}
+    if mats == 3:
+        shapes["w_gate"] = (cfg.d_model, m.expert_d_ff)
+    expert_bytes = quantized_expert_bytes(
+        shapes, rescfg.quantization, dtype_bytes, rescfg.quant_group_size
     )
     slots = rescfg.num_slots or m.num_experts
     min_slots = m.top_k + rescfg.prefetch_margin
@@ -151,11 +160,16 @@ class RotaryResidencyManager:
         self.policies: List[ResidencyPolicy] = []
         for li, hw in enumerate(host_experts):
             shapes = {name: tuple(w.shape[1:]) for name, w in hw.items()}
-            store = SlotStore(slots, shapes, dtype, rescfg.quantization)
+            store = SlotStore(
+                slots, shapes, dtype, rescfg.quantization,
+                group_size=rescfg.quant_group_size,
+            )
             policy = make_policy(rescfg.mode, m.num_experts, slots, rescfg, seed=seed + li)
             # full policy: preload everything (identity LUT) in one batch
             if rescfg.mode == "full":
-                store.write_batch(list(range(m.num_experts)), dict(hw))
+                self.stats.bytes_uploaded += store.write_batch(
+                    list(range(m.num_experts)), dict(hw)
+                )
             self.stores.append(store)
             self.policies.append(policy)
         # persistent device-resident LUT per layer (patched incrementally on
@@ -207,6 +221,7 @@ class RotaryResidencyManager:
         )
         self.stats.upload_dispatches += store.dispatches - before
         self.stats.device_dispatches += store.dispatches - before
+        self.stats.bytes_uploaded += moved
         return moved
 
     def resolve(

@@ -6,9 +6,18 @@ compiled gather path needs no branches. Writes go through
 ``jax.lax.dynamic_update_slice`` style ``.at[slot].set`` with donation, the
 host->HBM DMA analog.
 
-Optional int8 quantization (the Q4_K_M analog, DESIGN.md §2): experts are stored
-as symmetric per-output-channel int8 + f32 scales; the gather path dequantizes
-after the take (the Pallas ``moe_gmm`` kernel dequantizes in VMEM on real TPUs).
+Quantized stores (``repro.quant`` has the bytes-per-expert table):
+
+* ``int8`` — symmetric per-output-channel int8 + f32 scales (~0.5x f16 link
+  bytes);
+* ``int4`` — grouped two-nibbles-per-byte packing with per-group f16
+  scale + min over the reduction axis (Q4_K_M analog, ~0.28x f16 bytes at
+  the default group of 64).
+
+The gather path dequantizes after the take on this CPU host — memoized per
+write generation, so a store that didn't rotate never re-dequantizes — while
+the Pallas ``moe_gmm`` kernel keeps packed weights in HBM/VMEM and
+dequantizes in-register on real TPUs.
 """
 from __future__ import annotations
 
@@ -19,7 +28,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.quant import (
+    GROUP_SIZE_DEFAULT,
+    dequantize_int4,
+    int4_tensor_bytes,
+    quantize_int4_batch,
+)
+
 Params = Dict[str, Any]
+
+QUANTIZATIONS = (None, "int8", "int4")
 
 
 def quantize_int8(w: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
@@ -64,33 +82,64 @@ class SlotStore:
         weight_shapes: Dict[str, Tuple[int, ...]],   # e.g. w_gate: (D, F)
         dtype: Any,
         quantization: Optional[str] = None,
+        group_size: int = GROUP_SIZE_DEFAULT,
     ):
+        assert quantization in QUANTIZATIONS, quantization
         self.num_slots = num_slots
         self.dtype = jnp.dtype(dtype)
         self.quantization = quantization
+        self.group_size = group_size
         self.version = 0                # bumped per write (stacked-cache key)
         self.dispatches = 0             # scatter launches issued (batched: one
-                                        # per weight tensor per rotation)
-        store_dtype = jnp.int8 if quantization == "int8" else self.dtype
+                                        # per weight tensor component per rotation)
+        self.bytes_uploaded = 0         # cumulative host->device upload bytes
+        self.dequant_runs = 0           # lazy host dequantizations executed
+        self._pytree_cache: Optional[Params] = None
+        self._pytree_version = -1
+        if quantization == "int8":
+            store_dtype = jnp.int8
+        elif quantization == "int4":
+            store_dtype = jnp.uint8
+        else:
+            store_dtype = self.dtype
         self.buffers: Params = {
-            name: jnp.zeros((num_slots + 1,) + shape, store_dtype)
+            name: jnp.zeros(
+                (num_slots + 1,)
+                + (self._packed_shape(shape) if quantization == "int4" else shape),
+                store_dtype,
+            )
             for name, shape in weight_shapes.items()
         }
+        self.scales: Params = {}
+        self.mins: Params = {}
         if quantization == "int8":
-            self.scales: Params = {
+            self.scales = {
                 name: jnp.zeros((num_slots + 1, shape[-1]), jnp.float32)
                 for name, shape in weight_shapes.items()
             }
-        else:
-            self.scales = {}
+        elif quantization == "int4":
+            for name, shape in weight_shapes.items():
+                gshape = self._group_shape(shape)
+                self.scales[name] = jnp.zeros((num_slots + 1,) + gshape, jnp.float16)
+                self.mins[name] = jnp.zeros((num_slots + 1,) + gshape, jnp.float16)
+
+    def _packed_shape(self, shape: Tuple[int, ...]) -> Tuple[int, ...]:
+        return shape[:-2] + (shape[-2] // 2, shape[-1])
+
+    def _group_shape(self, shape: Tuple[int, ...]) -> Tuple[int, ...]:
+        from repro.quant import effective_group
+
+        g = effective_group(shape[-2], self.group_size)
+        return shape[:-2] + (shape[-2] // g, shape[-1])
 
     @property
     def bytes_per_expert(self) -> int:
         per = 0
         for name, buf in self.buffers.items():
             per += int(np.prod(buf.shape[1:])) * buf.dtype.itemsize
-            if self.scales:
-                per += int(np.prod(self.scales[name].shape[1:])) * 4
+        for tree in (self.scales, self.mins):
+            for name, s in tree.items():
+                per += int(np.prod(s.shape[1:])) * s.dtype.itemsize
         return per
 
     @property
@@ -110,10 +159,11 @@ class SlotStore:
         *,
         donate: bool = False,
     ) -> int:
-        """Upload N experts in ONE stacked scatter per weight tensor.
+        """Upload N experts in ONE stacked scatter per weight tensor component.
 
         A rotation that moves N experts costs one ``.at[idx].set`` dispatch per
-        tensor (3 for swiglu) instead of N per tensor; ``donate`` additionally
+        tensor component (3 tensors for swiglu; quantized stores add their
+        scale/min planes) instead of N per tensor; ``donate`` additionally
         donates the old device buffer to the scatter so steady-state rotation
         allocates nothing (safe only when no snapshot of the buffer is live —
         the fused decode path rotates strictly after replay).
@@ -135,33 +185,108 @@ class SlotStore:
                 self.scales[name] = scatter(self.scales[name], idx, jnp.asarray(scale))
                 self.dispatches += 2
                 moved += q.nbytes + scale.nbytes
+            elif self.quantization == "int4":
+                q, scale, mn = quantize_int4_batch(
+                    w.astype(np.float32), self.group_size
+                )
+                self.buffers[name] = scatter(self.buffers[name], idx, jnp.asarray(q))
+                self.scales[name] = scatter(self.scales[name], idx, jnp.asarray(scale))
+                self.mins[name] = scatter(self.mins[name], idx, jnp.asarray(mn))
+                self.dispatches += 3
+                moved += q.nbytes + scale.nbytes + mn.nbytes
             else:
                 self.buffers[name] = scatter(
                     self.buffers[name], idx, jnp.asarray(w, self.dtype)
                 )
                 self.dispatches += 1
                 moved += int(np.prod(w.shape)) * self.dtype.itemsize
+        self.bytes_uploaded += moved
         return moved
 
     def as_pytree(self) -> Params:
-        """The {w_*} pytree ``moe_gathered`` consumes (dequantized view if int8).
+        """The {w_*} pytree ``moe_gathered`` consumes (dequantized view when
+        quantized).
 
-        int8 note: on this CPU host we dequantize lazily per call; the Pallas
-        kernel path keeps int8 in HBM/VMEM and dequantizes in-register.
+        Quantized note: on this CPU host we dequantize lazily, MEMOIZED per
+        write generation — repeated calls between rotations return the cached
+        tree, and any ``write_batch`` invalidates it (``self.version`` is the
+        key). The Pallas kernel path keeps packed weights in HBM/VMEM and
+        dequantizes in-register instead.
         """
+        if self.quantization is None:
+            return dict(self.buffers)
+        if self._pytree_version == self.version and self._pytree_cache is not None:
+            return self._pytree_cache
+        out = {}
         if self.quantization == "int8":
-            out = {}
             for name, buf in self.buffers.items():
                 # scale [S+1, F] broadcasts over the middle dims of [S+1, .., F]
                 scale = self.scales[name].reshape(
                     (buf.shape[0],) + (1,) * (buf.ndim - 2) + (buf.shape[-1],)
                 )
                 out[name] = dequantize_int8(buf, scale, self.dtype)
-            return out
-        return dict(self.buffers)
+        else:
+            for name, buf in self.buffers.items():
+                out[name] = dequantize_int4(
+                    buf, self.scales[name], self.mins[name], self.dtype
+                )
+        self.dequant_runs += 1
+        self._pytree_cache = out
+        self._pytree_version = self.version
+        return out
 
     def raw_pytree(self) -> Params:
+        """Packed view (what a real-TPU ``moe_slot_ffn`` consumes in HBM):
+        buffers plus ``scale_*`` / ``min_*`` planes."""
         out = dict(self.buffers)
         for name, s in self.scales.items():
             out[f"scale_{name}"] = s
+        for name, m in self.mins.items():
+            out[f"min_{name}"] = m
         return out
+
+
+def fake_quantized_batch(
+    w: np.ndarray,
+    quantization: str,
+    dtype: Any,
+    group_size: int = GROUP_SIZE_DEFAULT,
+) -> np.ndarray:
+    """dequant(quant(w)) for a stacked [E, .., F] host tensor, through the
+    EXACT jnp ops ``as_pytree`` uses — f32 numpy out. The engine's host miss
+    correction computes with this so a missed expert's host GEMM matches the
+    device's dequantized slot compute bit-for-bit (exactness across residency
+    modes under quantization)."""
+    w = np.asarray(w, np.float32)
+    if quantization == "int8":
+        q, scale = quantize_int8_batch(w)
+        scale_b = scale.reshape((w.shape[0],) + (1,) * (w.ndim - 2) + (w.shape[-1],))
+        deq = dequantize_int8(jnp.asarray(q), jnp.asarray(scale_b), dtype)
+    elif quantization == "int4":
+        packed, scale, mn = quantize_int4_batch(w, group_size)
+        deq = dequantize_int4(
+            jnp.asarray(packed), jnp.asarray(scale), jnp.asarray(mn), dtype
+        )
+    else:
+        raise ValueError(f"unknown quantization {quantization!r}")
+    return np.asarray(deq, np.float32)
+
+
+def quantized_expert_bytes(
+    weight_shapes: Dict[str, Tuple[int, ...]],
+    quantization: Optional[str],
+    dtype_bytes: int = 2,
+    group_size: int = GROUP_SIZE_DEFAULT,
+) -> int:
+    """Exact link bytes of ONE expert under ``quantization`` — the unit the
+    feasibility check and the cost model price rotations in."""
+    total = 0
+    for shape in weight_shapes.values():
+        n = int(np.prod(shape))
+        if quantization == "int8":
+            total += n + shape[-1] * 4
+        elif quantization == "int4":
+            total += int4_tensor_bytes(shape, group_size)
+        else:
+            total += n * dtype_bytes
+    return total

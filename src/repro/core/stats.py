@@ -44,6 +44,9 @@ class EngineStats:
                                     # device_dispatches; <=1 per layer per step)
     upload_dispatches: int = 0      # slot-upload scatter launches (batched: one
                                     # per weight tensor per rotation, not per expert)
+    bytes_uploaded: int = 0         # real host->device slot-upload bytes (packed
+                                    # bytes under int8/int4 — the link traffic the
+                                    # quantized store shrinks ~2x / ~4x)
     replayed_steps: int = 0         # decode steps suffix-replayed after a miss
     replay_pulls: int = 0           # sync_pulls issued BY replay (subset of
                                     # sync_pulls; lets the speculative window's
@@ -99,6 +102,7 @@ class EngineStats:
             "hit_rate": round(self.hit_rate, 4),
             "misses": self.misses,
             "bytes_loaded_MB": round(self.bytes_loaded / 2**20, 2),
+            "bytes_uploaded_MB": round(self.bytes_uploaded / 2**20, 2),
             "modeled_ms_per_token": round(1e3 * self.modeled_step_time(), 3),
             "modeled_tok_per_s": round(
                 1.0 / self.modeled_step_time() if self.modeled_step_time() else 0.0, 2

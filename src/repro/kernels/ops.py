@@ -66,9 +66,10 @@ def moe_slot_ffn(x: jax.Array, slots: dict, lut: jax.Array, **blocks) -> jax.Arr
 
 
 def slot_gmm(
-    x: jax.Array, w: jax.Array, lut: jax.Array, scale: Optional[jax.Array] = None, **blocks
+    x: jax.Array, w: jax.Array, lut: jax.Array,
+    scale: Optional[jax.Array] = None, mn: Optional[jax.Array] = None, **blocks
 ) -> jax.Array:
-    return _gmm.slot_gmm(x, w, lut, scale, interpret=_interpret(), **blocks)
+    return _gmm.slot_gmm(x, w, lut, scale, mn, interpret=_interpret(), **blocks)
 
 
 def topk_gate(logits: jax.Array, k: int, *, normalize: bool = True

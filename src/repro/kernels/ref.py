@@ -14,10 +14,17 @@ from repro.models.attention import reference_attention
 
 def slot_gmm_ref(
     x: jax.Array,              # [E, C, D] per-expert token batches
-    w: jax.Array,              # [S+1, D, F] slot weights (trailing slot zero)
+    w: jax.Array,              # [S+1, D, F] slot weights ([S+1, D/2, F] u8 if int4)
     lut: jax.Array,            # [E] int32 expert -> slot
-    scale: Optional[jax.Array] = None,   # [S+1, F] int8 per-channel scales
+    scale: Optional[jax.Array] = None,   # int8: [S+1, F] f32 | int4: [S+1, D/G, F] f16
+    mn: Optional[jax.Array] = None,      # int4: [S+1, D/G, F] f16 group mins
 ) -> jax.Array:
+    if w.dtype == jnp.uint8:             # grouped int4: dequant BEFORE the dot
+        from repro.quant import dequantize_int4
+
+        wg = jnp.take(dequantize_int4(w, scale, mn), lut, axis=0)
+        out = jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32), wg)
+        return out.astype(jnp.float32)
     wg = jnp.take(w, lut, axis=0).astype(jnp.float32)            # [E, D, F]
     out = jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32), wg)
     if scale is not None:
@@ -27,21 +34,19 @@ def slot_gmm_ref(
 
 def moe_slot_ffn_ref(
     x: jax.Array,              # [E, C, D]
-    slots: dict,               # w_gate/w_up/w_down (+ scale_* when int8)
+    slots: dict,               # w_gate/w_up/w_down (+ scale_* / min_* when quantized)
     lut: jax.Array,
 ) -> jax.Array:
-    def g(name):
-        return slot_gmm_ref(x, slots[name], lut, slots.get(f"scale_{name}"))
+    def g(name, xx=x):
+        return slot_gmm_ref(
+            xx, slots[name], lut, slots.get(f"scale_{name}"), slots.get(f"min_{name}")
+        )
 
     if "w_gate" in slots:
         h = jax.nn.silu(g("w_gate")) * g("w_up")
     else:
         h = jax.nn.gelu(g("w_up"))
-    wd = jnp.take(slots["w_down"], lut, axis=0).astype(jnp.float32)
-    out = jnp.einsum("ecf,efd->ecd", h.astype(jnp.float32), wd)
-    if "scale_w_down" in slots:
-        out = out * jnp.take(slots["scale_w_down"], lut, axis=0)[:, None, :]
-    return out
+    return g("w_down", h.astype(jnp.float32))
 
 
 def flash_attention_ref(

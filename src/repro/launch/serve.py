@@ -15,6 +15,10 @@ import argparse
 import jax
 import numpy as np
 
+# CLI spelling -> ResidencyConfig.quantization ("none" is how the default is
+# spelled on the command line; None itself is impossible to type)
+QUANT_CHOICES = {"none": None, "int8": "int8", "int4": "int4"}
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
@@ -38,7 +42,12 @@ def main() -> None:
     ap.add_argument("--spec-cap", type=int, default=4,
                     help="batch-engine per-row speculative length cap "
                          "(1 disables speculation)")
-    ap.add_argument("--quantization", default=None, choices=[None, "int8"])
+    ap.add_argument("--quantization", default="none",
+                    choices=sorted(QUANT_CHOICES),
+                    help="slot-store weight format (int4 = grouped "
+                         "two-nibbles-per-byte, ~4x smaller rotations)")
+    ap.add_argument("--quant-group", type=int, default=64,
+                    help="int4 rows per scale/min group (Q4_K_M-style)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -57,7 +66,8 @@ def main() -> None:
     rescfg = None
     if args.residency != "full" and cfg.has_moe:
         rescfg = ResidencyConfig(mode=args.residency, num_slots=slots,
-                                 quantization=args.quantization)
+                                 quantization=QUANT_CHOICES[args.quantization],
+                                 quant_group_size=args.quant_group)
 
     if args.engine == "rotary":
         from repro.core import RotaryEngine
@@ -65,7 +75,12 @@ def main() -> None:
         assert cfg.has_moe, "--engine rotary requires an MoE arch"
         b = max(1, args.batch)
         eng = RotaryEngine(
-            cfg, params, rescfg or ResidencyConfig(mode="rotary", num_slots=slots),
+            cfg, params,
+            rescfg or ResidencyConfig(
+                mode="rotary", num_slots=slots,
+                quantization=QUANT_CHOICES[args.quantization],
+                quant_group_size=args.quant_group,
+            ),
             rt=rt, batch=b, host_routing=args.host_routing,
             spec_k=max(1, args.spec_k),
         )

@@ -1,0 +1,37 @@
+"""Grouped weight quantization for the rotating slot link (Q4_K_M analog).
+
+The host link is the currency of the whole system: every rotation ships
+expert weights host->HBM, and every byte saved is amortized over the K
+tokens of a speculative window (``rotate_window_from_telemetry`` coalesces
+uploads to the last write per slot, so a group transferred once serves a
+whole window). This package packs experts as grouped 4-bit integers — two
+nibbles per byte, per-group f16 scale + min over the reduction axis — and
+provides the pure-JAX unpack/dequant reference mirrored by the in-kernel
+dequant path of the Pallas ``moe_gmm`` kernel.
+
+Bytes per weight element (what one expert costs on the link):
+
+  ============  =====================  ==========  ============
+  format        layout                 bytes/elem  vs f16
+  ============  =====================  ==========  ============
+  f16 / bf16    dense                  2.0         1.00x
+  int8          + f32 scale [F]        ~1.0        ~0.50x
+  int4 grouped  2 nibbles/byte + f16   0.5 + 4/G   0.281x (G=64)
+                scale+min per group
+  ============  =====================  ==========  ============
+
+With the default group size G=64 an int4 expert moves ~0.28x the f16
+bytes (the Q4_K_M operating point, ~4.5 bits/weight), so a rotation that
+would ship 2 MB of bf16 ships ~0.56 MB — and under speculative windows
+that transfer happens once per K committed tokens, not once per token.
+"""
+from repro.quant.int4 import (  # noqa: F401
+    GROUP_SIZE_DEFAULT,
+    bytes_per_element,
+    dequantize_int4,
+    effective_group,
+    int4_tensor_bytes,
+    quantize_int4,
+    quantize_int4_batch,
+    unpack_int4,
+)

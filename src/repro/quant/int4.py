@@ -1,0 +1,129 @@
+"""Grouped int4 pack / unpack / dequant (the Q4_K_M-style slot format).
+
+Layout
+------
+Weights quantize along axis ``-2`` — the reduction dim of every expert
+matrix (``w_gate``/``w_up`` group over ``d_model`` rows, ``w_down`` over
+``expert_d_ff`` rows) — in groups of ``group_size`` rows per output
+column. Each group stores an asymmetric affine code::
+
+    w  ~=  scale * q + mn,     q in [0, 15]
+
+with ``scale``/``mn`` kept in f16 (quantization uses the f16-ROUNDED
+values, so host dequant and in-kernel dequant agree bit-for-bit with what
+the quantizer optimized). Two consecutive rows pack into one byte: byte
+``i`` of the packed axis holds row ``2i`` in its low nibble and row
+``2i+1`` in its high nibble, so the packed tensor is ``[.., D/2, F]``
+uint8 next to ``[.., D/G, F]`` f16 scales and mins.
+
+The batched variant is bit-equal to quantizing each expert alone (groups
+never span the leading expert axis), which the upload path relies on:
+one stacked scatter per tensor per rotation must produce exactly the
+bytes N single-expert uploads would have.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+GROUP_SIZE_DEFAULT = 64
+
+# keeps a flat group (mx == mn) from dividing by zero; f16-representable
+_SCALE_EPS = 1e-6
+
+
+def effective_group(rows: int, group_size: int) -> int:
+    """Largest even divisor of ``rows`` that is <= ``group_size``.
+
+    Real dims (2048, 1408, ...) keep the requested group; tiny reduced
+    dims clamp so the group axis always tiles exactly.
+    """
+    assert rows % 2 == 0, f"int4 packing needs an even row count, got {rows}"
+    assert group_size >= 2, f"group_size must be >= 2, got {group_size}"
+    g = min(group_size, rows)
+    while rows % g or g % 2:
+        g -= 1
+    return g
+
+
+def quantize_int4(
+    w: np.ndarray, group_size: int = GROUP_SIZE_DEFAULT
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """w [.., D, F] float -> (packed u8 [.., D/2, F], scale f16 [.., D/G, F],
+    mn f16 [.., D/G, F]) with G = ``effective_group(D, group_size)``."""
+    w = np.asarray(w, np.float32)
+    d, f = w.shape[-2], w.shape[-1]
+    g = effective_group(d, group_size)
+    lead = w.shape[:-2]
+    grp = w.reshape(lead + (d // g, g, f))
+    mn = grp.min(axis=-2).astype(np.float16)
+    mx = grp.max(axis=-2)
+    scale = ((mx - mn.astype(np.float32)) / 15.0 + _SCALE_EPS).astype(np.float16)
+    # quantize against the f16-ROUNDED affine so dequant is consistent
+    s32 = scale.astype(np.float32)[..., None, :]
+    m32 = mn.astype(np.float32)[..., None, :]
+    q = np.clip(np.round((grp - m32) / s32), 0, 15).astype(np.uint8)
+    q = q.reshape(lead + (d, f))
+    packed = (q[..., 0::2, :] | (q[..., 1::2, :] << 4)).astype(np.uint8)
+    return packed, scale, mn
+
+
+def quantize_int4_batch(
+    w: np.ndarray, group_size: int = GROUP_SIZE_DEFAULT
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """``quantize_int4`` over a leading expert axis: w [N, .., D, F] ->
+    (packed [N, .., D/2, F], scale [N, .., D/G, F], mn [N, .., D/G, F])
+    bit-equal to quantizing each expert alone (groups are per-expert, so
+    the batched upload path matches the one-expert path byte-for-byte)."""
+    assert w.ndim >= 3, "batched quantization expects a leading expert axis"
+    return quantize_int4(w, group_size)
+
+
+def unpack_int4(packed: jnp.ndarray) -> jnp.ndarray:
+    """packed u8 [.., P, F] -> q u8 [.., 2P, F] (row 2i = low nibble of
+    byte i, row 2i+1 = high nibble)."""
+    lo = packed & 0xF
+    hi = packed >> 4
+    q = jnp.stack([lo, hi], axis=-2)                   # [.., P, 2, F]
+    return q.reshape(packed.shape[:-2] + (2 * packed.shape[-2], packed.shape[-1]))
+
+
+def dequantize_int4(
+    packed: jnp.ndarray,
+    scale: jnp.ndarray,
+    mn: jnp.ndarray,
+    dtype: Any = jnp.float32,
+) -> jnp.ndarray:
+    """Pure-JAX unpack + affine dequant (the reference the Pallas kernel's
+    in-VMEM dequant mirrors). Group size is inferred from the shapes."""
+    q = unpack_int4(packed).astype(jnp.float32)
+    rows = q.shape[-2]
+    group = rows // scale.shape[-2]
+    s = jnp.repeat(scale.astype(jnp.float32), group, axis=-2)
+    m = jnp.repeat(mn.astype(jnp.float32), group, axis=-2)
+    return (q * s + m).astype(dtype)
+
+
+def int4_tensor_bytes(shape: Tuple[int, ...], group_size: int = GROUP_SIZE_DEFAULT) -> int:
+    """Exact packed+scales+mins bytes of one [.., D, F] tensor."""
+    d, f = shape[-2], shape[-1]
+    lead = int(np.prod(shape[:-2])) if len(shape) > 2 else 1
+    g = effective_group(d, group_size)
+    return lead * ((d // 2) * f + 2 * (d // g) * f * 2)   # u8 + f16 scale + f16 mn
+
+
+def bytes_per_element(
+    quantization: str | None,
+    dtype_bytes: int = 2,
+    group_size: int = GROUP_SIZE_DEFAULT,
+) -> float:
+    """Approximate link bytes per weight element under ``quantization``
+    (int8 counts its f32 per-channel scale as amortized-out, matching the
+    feasibility model's 1 byte/elem)."""
+    if quantization == "int8":
+        return 1.0
+    if quantization == "int4":
+        return 0.5 + 4.0 / group_size
+    return float(dtype_bytes)

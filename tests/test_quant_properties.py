@@ -1,0 +1,50 @@
+"""Hypothesis properties for the grouped int4 subsystem (dev-deps only;
+tier-1 mirrors live in test_quant.py and run without hypothesis)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # dev-only dep (requirements-dev.txt)
+from hypothesis import given, settings, strategies as st
+
+from repro.quant import (
+    dequantize_int4,
+    effective_group,
+    quantize_int4,
+    quantize_int4_batch,
+)
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+even = st.integers(1, 16).map(lambda n: 2 * n)          # rows must pack in pairs
+
+
+@given(st.integers(0, 6), even, st.integers(1, 12), even, st.floats(0.1, 8.0))
+def test_int4_roundtrip_bounded_by_group_scale(seed, rows, cols, group, spread):
+    """For every element, |dequant(quant(w)) - w| <= its group's scale step
+    (the affine code's quantization step, f16-rounded)."""
+    w = (np.random.default_rng(seed).standard_normal((rows, cols)) * spread
+         ).astype(np.float32)
+    packed, scale, mn = quantize_int4(w, group)
+    back = np.asarray(
+        dequantize_int4(jnp.asarray(packed), jnp.asarray(scale), jnp.asarray(mn))
+    )
+    g = effective_group(rows, group)
+    step = np.repeat(scale.astype(np.float32), g, axis=-2)
+    assert (np.abs(back - w) <= step + 1e-6).all()
+
+
+@given(st.integers(0, 6), st.integers(1, 6), even, st.integers(1, 10), even)
+def test_int4_batch_bit_equal_to_single(seed, n, rows, cols, group):
+    """quantize_int4_batch over a stacked expert axis is byte-identical to
+    quantizing each expert alone — the one-scatter-per-tensor rotation upload
+    must produce the same device bytes as N single-expert uploads (mirrors
+    the int8 batch property in test_fused_decode)."""
+    w = np.random.default_rng(seed).standard_normal((n, rows, cols)).astype(np.float32)
+    pb, sb, mb = quantize_int4_batch(w, group)
+    for i in range(n):
+        p1, s1, m1 = quantize_int4(w[i], group)
+        np.testing.assert_array_equal(pb[i], p1)
+        np.testing.assert_array_equal(sb[i], s1)
+        np.testing.assert_array_equal(mb[i], m1)
