@@ -3,7 +3,7 @@ PYTHON ?= python
 SHELL := /bin/bash
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: dev-deps tier1 ci bench bench-decode smoke-int4
+.PHONY: dev-deps tier1 ci bench bench-decode smoke-int4 smoke-prefill
 
 dev-deps:          ## install test-only deps (hypothesis property coverage)
 	$(PYTHON) -m pip install -r requirements-dev.txt
@@ -19,7 +19,13 @@ smoke-int4:        ## fast packed-path smoke: rotary decode + spec windows on
 	  --residency rotary --quantization int4 --batch 2 --requests 2 \
 	  --prompt-len 8 --max-new 4 --spec-k 2 --cache-len 64
 
-ci: dev-deps tier1 smoke-int4 ## "green" in one command: dev deps + tier-1 + int4 smoke
+smoke-prefill:     ## long-prompt chunked-prefill smoke: rotary serve ingesting
+                   ## the prompt at one compiled launch per power-of-two chunk
+	$(PYTHON) -m repro.launch.serve --arch qwen2-moe-a2.7b --engine rotary \
+	  --residency rotary --batch 2 --requests 2 --prompt-len 96 --max-new 4 \
+	  --prefill-chunk 32 --cache-len 128
+
+ci: dev-deps tier1 smoke-int4 smoke-prefill ## "green" in one command: dev deps + tier-1 + int4 & prefill smokes
 
 bench:             ## all paper-table / kernel / hot-path benchmarks (emits BENCH_decode.json)
 	$(PYTHON) -m benchmarks.run

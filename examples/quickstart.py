@@ -1,7 +1,11 @@
-"""Quickstart: build the paper's MoE, run it under rotary residency, compare
-policies — 2 minutes on a laptop CPU.
+"""Quickstart: build the paper's MoE, run it under rotary residency with the
+current hot-path features — chunked prefill, speculative decode, grouped-int4
+slots — and check the exactness contract. ~2 minutes on a laptop CPU.
 
     PYTHONPATH=src python examples/quickstart.py
+
+The same switches on the CLI: ``python -m repro.launch.serve --engine rotary
+--residency rotary --prefill-chunk 16 --spec-k 4 --quantization int4``.
 """
 import jax
 import numpy as np
@@ -19,22 +23,37 @@ def main():
     cfg = reduce_for_smoke(full)                        # same structure, tiny dims
     params = init_params(cfg, jax.random.PRNGKey(0))
 
-    prompt = np.random.default_rng(0).integers(0, cfg.vocab_size, (1, 12)).astype(np.int32)
+    prompt = np.random.default_rng(0).integers(0, cfg.vocab_size, (1, 24)).astype(np.int32)
     outputs = {}
-    for mode in ("full", "rotary"):
-        eng = RotaryEngine(
-            cfg, params,
-            ResidencyConfig(mode=mode, num_slots=5),    # 5 of 8 experts resident
-            rt=Runtime(cache_len=64), batch=1,
-        )
-        outputs[mode] = eng.generate(prompt, 10)
+    for label, rescfg, kw in (
+        # full residency: every expert on-device (the reference)
+        ("full", ResidencyConfig(mode="full"), {}),
+        # the paper's technique: 5 of 8 experts resident, chunked prefill
+        # (one compiled launch per 8-token chunk) + 4-token speculative
+        # windows (one launch per 4 drafted tokens)
+        ("rotary", ResidencyConfig(mode="rotary", num_slots=5),
+         dict(prefill_chunk=8, spec_k=4)),
+        # same, with grouped-int4 slot uploads (~0.28x the f16 link bytes)
+        ("rotary+int4", ResidencyConfig(mode="rotary", num_slots=5,
+                                        quantization="int4"),
+         dict(prefill_chunk=8, spec_k=4)),
+    ):
+        eng = RotaryEngine(cfg, params, rescfg,
+                           rt=Runtime(cache_len=64), batch=1, **kw)
+        outputs[label] = eng.generate(prompt, 10)
         s = eng.stats.summary()
-        print(f"{mode:7s} tokens={outputs[mode][0].tolist()}")
-        print(f"        hit_rate={s['hit_rate']} bytes_loaded={s['bytes_loaded_MB']}MB "
+        print(f"{label:12s} tokens={outputs[label][0].tolist()}")
+        print(f"             hit_rate={s['hit_rate']} uploaded={s['bytes_uploaded_MB']}MB "
+              f"prefill_chunks={s['prefill_chunks']} spec_windows={s['spec_windows']} "
               f"modeled_ms/token={s['modeled_ms_per_token']}")
-    assert (outputs["full"] == outputs["rotary"]).all(), "residency must not change outputs"
-    print("\nOK: rotary residency generated IDENTICAL tokens with only 5/8 experts"
-          " device-resident (misses host-corrected, prefetch hidden behind compute).")
+    # the exactness contract: residency, chunked prefill and speculation must
+    # not change greedy outputs (int4 is exactness-clean within its format,
+    # so its tokens may differ from the f16 store's)
+    assert (outputs["full"] == outputs["rotary"]).all(), \
+        "residency must not change outputs"
+    print("\nOK: rotary residency + chunked prefill + spec-4 decode generated"
+          " IDENTICAL tokens with only 5/8 experts device-resident"
+          " (misses host-corrected / replayed, prefetch hidden behind compute).")
 
 
 if __name__ == "__main__":

@@ -64,6 +64,25 @@ below. Tokens match the per-layer sync path for every policy (on replayed
 steps the demand predictor saw the optimistic hiddens — the mechanism is
 unchanged, only its input differs).
 
+Chunked prefill hot path (``prefill_chunk=C``)
+----------------------------------------------
+Prompts ingest in power-of-two chunks (``prefill_chunk_plan`` bounds the
+compile cache): each chunk is ONE compiled whole-stack launch
+(``build_fused_prefill_step`` wrapping ``tfm.prefill_chunk_model`` — chunk
+attention appends to the donated KV state, the MoE half gathers all B*C
+chunk tokens through the same ``stacked_residency()`` pytree decode uses)
+plus ONE queue-draining pull and ONE coalesced rotation window at the chunk
+boundary (the pre-gating demand GEMM over the chunk's stacked hiddens, EMA
+fold, ring transition per layer, uploads batched to one scatter per weight
+tensor per rotated layer). A missed chunk suffix-replays per layer from the
+first missed layer's saved block input, exactly like decode. Per-layer
+engines (host_routing / LRU / ``fused_decode=False``) walk the same chunks
+layer-by-layer with the same boundary rotation — the benchmark baseline —
+and because both paths drive rotation through the SAME compiled demand
+program, residency (and therefore the miss pattern) evolves identically:
+fused-chunk logits and post-prefill KV are bit-identical to the chunked
+layer walk, including slot-starved and int8/int4 stores.
+
 Per-layer hot walk (fallback) and legacy switches
 -------------------------------------------------
 The PR-1 per-layer hot path (jitted attention half + routed MoE half per
@@ -73,6 +92,23 @@ reproduces the seed engine (blocking logits pull + numpy softmax/top-k + LUT
 re-upload per layer — kept as the benchmark baseline), and LRU residency
 automatically uses the per-layer sync walk because its reactive blocking
 loads need routed ids on host mid-step.
+
+Exactness invariant and telemetry→transition map
+------------------------------------------------
+THE contract every fast path in this module keeps: greedy outputs are
+bit-identical to full residency — rotation, speculation, chunking and
+quantized stores may change WHERE compute happens and WHAT moves over the
+link, never what comes out (quantized stores are exactness-clean within
+their format: the host correction GEMMs against dequant∘quant weights).
+The mechanisms are suffix replay (fused decode, chunked prefill) and KV
+rollback + replay (speculative windows); ``docs/ARCHITECTURE.md`` has the
+full dispatch-count table. Telemetry consumers on the host:
+``route_ids``/``route_weights`` feed ``DemandPredictor.observe`` and
+hit/miss accounting; ``route_miss`` picks the replay start layer;
+``demand_next`` (decode, on-device GEMM) and the chunk-boundary demand GEMM
+(prefill) feed ``DemandPredictor.update`` → ``policy.prepare`` → ring
+transition → ``SlotStore.write_batch``; ``route_x`` anchors replay;
+``route_h`` is the prefill demand GEMM's input.
 """
 from __future__ import annotations
 
@@ -189,6 +225,69 @@ def _demand_aux_fn(
     return aux_fn
 
 
+def prefill_chunk_plan(s: int, chunk: int) -> List[int]:
+    """Split a prompt of ``s`` tokens into power-of-two chunk lengths.
+
+    ``chunk`` (itself a power of two) repeats while the remainder allows, then
+    the tail decomposes into descending powers of two — so a prompt of any
+    length compiles at most ``log2(chunk)`` distinct chunk shapes beyond the
+    steady-state one, keeping the fused prefill step's compile cache bounded.
+    """
+    assert s >= 1, "empty prompt"
+    assert chunk >= 1 and (chunk & (chunk - 1)) == 0, (
+        f"prefill_chunk must be a power of two, got {chunk}"
+    )
+    plan = [chunk] * (s // chunk)
+    rem, bit, bits = s - chunk * (s // chunk), 1, []
+    while rem:
+        if rem & 1:
+            bits.append(bit)
+        rem >>= 1
+        bit <<= 1
+    return plan + sorted(bits, reverse=True)
+
+
+def build_fused_prefill_step(
+    cfg: ModelConfig,
+    rt: Runtime,
+    *,
+    with_demand: bool,
+    donate_state: bool = True,
+    keep_replay_anchor: bool = True,
+    with_head: bool = True,
+) -> Callable:
+    """ONE compiled whole-stack prefill-CHUNK step: the prompt-ingestion
+    sibling of :func:`build_fused_decode_step`.
+
+    Returns a jitted ``fn(params, routers_next, tokens [B, C], state, cur_len,
+    residency) -> (logits [B, V], new_state, aux)`` wrapping
+    :func:`tfm.prefill_chunk_model`: the chunk's C positions run through the
+    whole stack (embed -> every layer -> lm head) in one launch, appending to
+    the DONATED KV state, gathering experts for all B*C chunk tokens from the
+    same ``stacked_residency()`` pytree decode uses, and emitting the same
+    ``route_*`` telemetry decode does. The engine calls this with
+    ``with_demand=False`` so the raw per-layer hiddens (``route_h``) stay in
+    the aux for the chunk-boundary demand GEMM (which must see
+    replay-corrected hiddens — an in-graph demand would bake in the
+    optimistic ones) and ``with_head=False`` for every chunk but a prompt's
+    last (only the final chunk's logits are consumed; the rest would pay the
+    [D, V] head GEMM and a [B, V] pull for nothing). The jit re-specializes
+    per chunk length; power-of-two chunk plans (:func:`prefill_chunk_plan`)
+    keep that cache bounded.
+    """
+    moe_segs = moe_segments(cfg)
+    aux_fn = _demand_aux_fn(moe_segs, with_demand, keep_replay_anchor)
+
+    def step(params, routers_next, tokens, state, cur_len, residency):
+        logits, new_state, aux = tfm.prefill_chunk_model(
+            cfg, params, tokens, state, cur_len, rt, residency=residency,
+            with_head=with_head,
+        )
+        return logits, new_state, aux_fn(aux, routers_next)
+
+    return jax.jit(step, donate_argnums=(3,) if donate_state else ())
+
+
 def build_fused_window_step(
     cfg: ModelConfig,
     rt: Runtime,
@@ -266,6 +365,7 @@ class RotaryEngine:
         host_routing: bool = False,
         fused_decode: Optional[bool] = None,
         spec_k: int = 1,
+        prefill_chunk: Optional[int] = None,
     ):
         """Decode-path switches (see module docstring for the mechanisms):
 
@@ -293,7 +393,24 @@ class RotaryEngine:
           position exactly like the single-token path replays a missed step.
           Requires the fused path; non-greedy decode falls back to
           single-token steps (the stochastic accept rule is a hook for now —
-          see ``repro.serving.sampler``).
+          see ``repro.serving.sampler``);
+        * ``prefill_chunk=C`` — chunked prefill hot path: the prompt ingests
+          in power-of-two chunks of at most C tokens
+          (``prefill_chunk_plan``). Fused engines run each chunk through ONE
+          compiled launch (``build_fused_prefill_step``) with ONE coalesced
+          rotation window between chunks, pre-gated by the previous chunk's
+          telemetry; per-layer engines (host_routing / LRU /
+          ``fused_decode=False``) walk the same chunks layer-by-layer — the
+          benchmark baseline. ``None`` keeps the legacy full-sequence
+          layer-walk prefill. Requires KV-cache-only block kinds (recurrent
+          stacks fall back to the legacy walk); the fused chunk replay
+          additionally requires window-free attention (ring caches fall back
+          to the chunked walk). The fused and walk chunked paths are
+          bit-identical to each other (logits AND post-prefill KV, every
+          residency mode and slot format), and greedy continuations match
+          the legacy full-sequence walk token for token — misses
+          host-correct in the walk and suffix-replay per chunk in the fused
+          path, exactly like decode.
         """
         assert cfg.has_moe, "RotaryEngine requires an MoE architecture"
         self.cfg = cfg
@@ -364,9 +481,24 @@ class RotaryEngine:
         # fused whole-stack step: additionally requires replay-safe per-layer
         # state — re-running an attention block overwrites the same KV slot,
         # while a recurrent update is destructive (see module docstring)
-        fused_ok = self._hot_decode and all(
+        kv_only = all(
             kind in ("attn_moe", "attn_mlp", "local_attn")
             for kind, _ in self.layers
+        )
+        fused_ok = self._hot_decode and kv_only
+        if prefill_chunk is not None:
+            assert prefill_chunk >= 1 and (prefill_chunk & (prefill_chunk - 1)) == 0, (
+                f"prefill_chunk must be a power of two, got {prefill_chunk}"
+            )
+        self.prefill_chunk = prefill_chunk
+        # chunked prefill threads the KV cache through multi-token appends:
+        # recurrent stacks (and frontend archs, whose prompt is not plain
+        # tokens) keep the legacy full-sequence walk; the fused chunk path
+        # additionally needs window-free attention, because its suffix replay
+        # re-reads pre-chunk cache content that a ring overwrite destroys
+        self._chunk_prefill_ok = kv_only and cfg.frontend is None
+        self._chunk_prefill_fused_ok = (
+            self._chunk_prefill_ok and cfg.attention.window is None
         )
         if fused_decode:
             assert fused_ok, (
@@ -391,13 +523,46 @@ class RotaryEngine:
         self._jits: Dict[Tuple, Callable] = {}
         self._head_jit = jax.jit(self._lm_head_impl)
         self._cost_cache: Dict[str, Tuple[float, float]] = {}
+        # stacked next-layer routers [L, D, E] + the chunk-boundary demand GEMM
+        # (softmax(h_l @ R_{l+1}), token-averaged): shared by EVERY chunked
+        # prefill path — walk and fused compute the pre-gating signal through
+        # the SAME jitted program on the same [L, T, D] stacked hiddens, so
+        # the residency evolution (and with it the miss pattern) is
+        # bit-identical between them, which is what makes slot-starved
+        # chunked prefill outputs bitwise comparable across paths. Built only
+        # for engines that can use it (the router stack is a real device
+        # upload a seed-baseline engine should not pay)
+        self._chunk_telem: List[Tuple] = []        # walk-path per-chunk buffer
+        if self._fused_decode or prefill_chunk is not None:
+            self._routers_next = jnp.asarray(self.predictor.next_layer_routers())
+
+            def demand_all(h_all, routers):        # [L, T, D], [L, D, E]
+                dl = jnp.einsum(
+                    "ltd,lde->lte", h_all.astype(jnp.float32), routers
+                )
+                return jax.nn.softmax(dl, axis=-1).mean(axis=1)
+
+            self._demand_all_jit = jax.jit(demand_all)
         if self._fused_decode:
             # rotation happens strictly after replay in the fused path, so no
             # residency snapshot outlives the buffers a rotation replaces
             self.manager.donate_buffers = True
-            self._routers_next = jnp.asarray(self.predictor.next_layer_routers())
             self._fused_step = build_fused_decode_step(
                 cfg, self.rt, with_demand=True, donate_state=True
+            )
+            # chunked prefill hot path: one whole-stack launch per chunk (the
+            # jit re-specializes per power-of-two chunk length). with_demand
+            # is OFF: the step keeps the raw per-layer hiddens (route_h) so
+            # the chunk-boundary demand GEMM above runs on authoritative
+            # (replay-corrected) hiddens, exactly like the walk baseline.
+            # Only a prompt's final chunk runs the lm head — the other
+            # chunks' queue-draining pull is the routing telemetry
+            self._fused_prefill_step = build_fused_prefill_step(
+                cfg, self.rt, with_demand=False, donate_state=True
+            )
+            self._fused_prefill_step_nohead = build_fused_prefill_step(
+                cfg, self.rt, with_demand=False, donate_state=True,
+                with_head=False,
             )
             self._moe_segs = moe_segments(cfg)
             self._pull_keys = [
@@ -405,6 +570,14 @@ class RotaryEngine:
                 for si in self._moe_segs
                 for nm in ("ids", "weights", "miss")
             ] + ["demand_next"]
+            # the prefill step has no in-graph demand: its telemetry pulls are
+            # the routing triple only (route_h stays device-side for the
+            # chunk-boundary demand GEMM; route_x is read only on replay)
+            self._prefill_pull_keys = [
+                f"route_{nm}/seg{si}"
+                for si in self._moe_segs
+                for nm in ("ids", "weights", "miss")
+            ]
             # stacked decode params: the expert warehouse never rides along —
             # the residency arg supplies expert weights in EVERY mode
             segs_p = []
@@ -457,6 +630,9 @@ class RotaryEngine:
                 h = apply_norm(cfg.norm, p["ln1"], x)
                 if mode == "decode":
                     y, new_state = tfm.attn.attention_decode(p["attn"], cfg.attention, h, state, cur_len)
+                elif mode == "chunk":
+                    y, new_state = tfm.attn.attention_prefill_chunk(
+                        p["attn"], cfg.attention, h, state, cur_len)
                 else:
                     y, new_state = tfm.attn.attention_prefill(
                         p["attn"], cfg.attention, h, rt.cache_len,
@@ -607,12 +783,19 @@ class RotaryEngine:
                 # --- modeled device time for this layer -------------------
                 flops, byts = self._layer_cost(kind, x.shape, cur_len, hits=int((~miss).sum()))
                 clock.compute(self.cost.compute_s(flops, byts))
-                # --- pre-gate the NEXT MoE layer from THIS hidden ----------
-                # (cyclic: the last layer pre-gates layer 0 of the next step)
-                nxt = (moe_li + 1) % self.num_moe_layers
-                demand = self.predictor.predict(nxt, np.asarray(h2).reshape(ids.shape[0], -1))
-                self.manager.prepare_layer(nxt, demand, clock)
-                self.predictor.observe(moe_li, ids, weights)
+                if mode == "chunk":
+                    # chunked prefill defers rotation to the chunk boundary
+                    # (mirrors the fused hot path — the boundary rotation runs
+                    # the shared demand GEMM on this chunk's hiddens, so walk
+                    # and fused see bit-identical residency evolution)
+                    self._chunk_telem.append((ids, weights, miss, h2))
+                else:
+                    # --- pre-gate the NEXT MoE layer from THIS hidden ------
+                    # (cyclic: the last layer pre-gates layer 0 of next step)
+                    nxt = (moe_li + 1) % self.num_moe_layers
+                    demand = self.predictor.predict(nxt, np.asarray(h2).reshape(ids.shape[0], -1))
+                    self.manager.prepare_layer(nxt, demand, clock)
+                    self.predictor.observe(moe_li, ids, weights)
             else:
                 (block,) = self._block_fn(kind, mode)
                 x, new_state = block(p_l, x, state if state else {}, cur)
@@ -846,12 +1029,18 @@ class RotaryEngine:
         return logits
 
     def _account_step_prefix(
-        self, ids: np.ndarray, miss: np.ndarray, stop_li: int, cur_len: int
+        self,
+        ids: np.ndarray,
+        miss: np.ndarray,
+        stop_li: int,
+        cur_len: int,
+        tokens: int = 1,
     ) -> None:
         """record_routing + modeled clock for layers ``< stop_li`` of one
-        authoritative decode position (ids/miss [L, T, k]), in seed order —
-        shared by the fused step and every position of a speculative window."""
-        xshape = (self.batch, 1, self.cfg.d_model)
+        authoritative step (ids/miss [L, T, k]), in seed order — shared by the
+        fused decode step, every position of a speculative window, and each
+        fused prefill chunk (``tokens`` = positions the launch processed)."""
+        xshape = (self.batch, tokens, self.cfg.d_model)
         for li, (kind, _) in enumerate(self.layers):
             if li >= stop_li:
                 break
@@ -1089,29 +1278,255 @@ class RotaryEngine:
     # public API
     # ------------------------------------------------------------------
     def prefill(self, tokens: np.ndarray) -> np.ndarray:
-        """tokens [B, S] -> logits [B, V]; builds the decode state."""
+        """tokens [B, S] -> logits [B, V]; builds the decode state.
+
+        With ``prefill_chunk=C`` (KV-only stacks) the prompt ingests in
+        power-of-two chunks: fused engines launch ONE compiled program per
+        chunk with one coalesced rotation window between chunks (misses
+        suffix-replayed per chunk, exactly like decode); per-layer engines
+        walk the same chunks layer-by-layer. Logits and post-prefill KV are
+        bit-identical BETWEEN the two chunked paths (fused vs walk, any
+        residency mode or slot format), and greedy continuations match the
+        legacy full-sequence walk token for token. Prompts longer than the
+        KV capacity fall back to the legacy walk: chunk appends would wrap
+        the cache ring mid-prompt, silently corrupting attention, where the
+        legacy path at least attends over the full prompt before truncating.
+        """
         b, s = tokens.shape
         assert b == self.batch
-        self.state = []
-        for si, (unit, reps) in enumerate(self.cfg.segments):
-            for r in range(reps):
-                for pi, kind in enumerate(unit):
-                    self.state.append(
-                        tfm._zero_block_state(self.cfg, kind, b, self.rt.cache_len)
-                    )
+        from repro.models.attention import _cache_capacity
+
+        chunked = (
+            self.prefill_chunk is not None
+            and self._chunk_prefill_ok
+            and s <= _cache_capacity(self.cfg.attention, self.rt.cache_len)
+        )
         t0 = time.perf_counter()
-        x = self._embed(jnp.asarray(tokens))
-        x = self._run_layers(x, "prefill", cur_len=0)
-        logits = self._lm_head(x[:, -1:])[:, 0]
+        if chunked and self._fused_decode and self._chunk_prefill_fused_ok:
+            logits = self._prefill_fused_chunked(tokens)
+            self.state = None
+        else:
+            self.state = [
+                tfm._zero_block_state(self.cfg, kind, b, self.rt.cache_len)
+                for kind, _ in self.layers
+            ]
+            if chunked:
+                logits = self._prefill_walk_chunked(tokens)
+            else:
+                x = self._embed(jnp.asarray(tokens))
+                x = self._run_layers(x, "prefill", cur_len=0)
+                logits = self._lm_head(x[:, -1:])[:, 0]
+            if self._fused_decode:
+                # one-time: stack the per-layer states into the scan layout
+                # the fused step consumes (and donates back, updated in place)
+                self._dstate = self._stack_state(self.state)
+                self.state = None
         self.stats.wall_s += time.perf_counter() - t0
         self.cur_len = s
         self.stats.tokens += b * s
-        if self._fused_decode:
-            # one-time: stack the per-layer states into the scan layout the
-            # fused step consumes (and donates back, updated in place)
-            self._dstate = self._stack_state(self.state)
-            self.state = None
         return np.asarray(logits)
+
+    def _rotate_chunk_boundary(
+        self,
+        ids: np.ndarray,                 # [L, T, k] the chunk's routing
+        weights: np.ndarray,             # [L, T, k]
+        miss: np.ndarray,                # [L, T, k]
+        h_rows: List[jax.Array],         # per MoE layer: [T, D] device hiddens
+    ) -> None:
+        """ONE coalesced rotation window at a chunk boundary, shared by the
+        walk and fused chunked prefill paths: the pre-gating demand GEMM runs
+        on device over the stacked per-layer hiddens (``_demand_all_jit`` —
+        the same compiled program in both paths, so residency evolves
+        bit-identically), then ``rotate_from_telemetry`` folds the EMA, runs
+        each layer's ring transition once, and batches the uploads to one
+        scatter per weight tensor per rotated layer. Hit/miss accounting
+        already happened (walk: ``resolve``; fused: prefix accounting +
+        replay), hence ``record=False``."""
+        h_all = jnp.stack(h_rows)                                   # [L, T, D]
+        demand = np.asarray(self._demand_all_jit(h_all, self._routers_next))
+        self.stats.device_dispatches += 1
+        self.manager.rotate_from_telemetry(
+            self.predictor, ids, weights, miss, demand,
+            clock=self.clock, record=False,
+        )
+
+    def _prefill_walk_chunked(self, tokens: np.ndarray) -> jax.Array:
+        """Per-layer chunked prefill (the layer-walk baseline, and the chunked
+        path for host_routing / LRU / ``fused_decode=False`` engines): each
+        chunk walks the stack with the same chunk-append attention the fused
+        step uses — one host sync per MoE layer per chunk — then rotates once
+        at the chunk boundary."""
+        s = tokens.shape[1]
+        d = self.cfg.d_model
+        cur, x = 0, None
+        for c in prefill_chunk_plan(s, self.prefill_chunk):
+            self._chunk_telem = []
+            x = self._embed(jnp.asarray(tokens[:, cur : cur + c]))
+            x = self._run_layers(x, "chunk", cur_len=cur)
+            self.stats.prefill_chunks += 1
+            self._rotate_chunk_boundary(
+                np.stack([t[0] for t in self._chunk_telem]),
+                np.stack([t[1] for t in self._chunk_telem]),
+                np.stack([t[2] for t in self._chunk_telem]),
+                [t[3].reshape(-1, d) for t in self._chunk_telem],
+            )
+            cur += c
+        self._chunk_telem = []      # don't pin the last chunk's device hiddens
+        return self._lm_head(x[:, -1:])[:, 0]
+
+    def _prefill_fused_chunked(self, tokens: np.ndarray) -> np.ndarray:
+        """Fused chunked prefill: ONE compiled whole-stack launch + one
+        queue-draining pull + one coalesced rotation window per chunk.
+
+        Per chunk: (1) launch the fused prefill-chunk step against the
+        current ``stacked_residency()`` with donated KV; (2) exactness — if
+        the optimistic pass missed, the chunk suffix replays from the first
+        missed layer with the per-layer walk (``_replay_prefill_chunk``),
+        host-correcting exactly like the walk baseline and patching the
+        telemetry with the authoritative routing/hiddens; (3) rotate once at
+        the boundary (``_rotate_chunk_boundary``: shared demand GEMM + EMA
+        fold + ring transitions + batched uploads). The final chunk also
+        rotates, so decode starts pre-gated the same way the walk leaves it.
+        """
+        b, s = tokens.shape
+        self._dstate = tfm.zero_state(self.cfg, b, self.rt.cache_len)
+        plan = prefill_chunk_plan(s, self.prefill_chunk)
+        cur, logits = 0, None
+        for ci, c in enumerate(plan):
+            last = ci == len(plan) - 1
+            step_fn = (
+                self._fused_prefill_step if last
+                else self._fused_prefill_step_nohead
+            )
+            residency = self.manager.stacked_residency()
+            logits_dev, self._dstate, aux = step_fn(
+                self._decode_params, self._routers_next,
+                jnp.asarray(tokens[:, cur : cur + c]), self._dstate,
+                jnp.int32(cur), residency,
+            )
+            self.stats.device_dispatches += 1
+            self.stats.prefill_chunks += 1
+            for k in self._prefill_pull_keys:
+                aux[k].copy_to_host_async()
+            self.stats.overlapped_pulls += len(self._prefill_pull_keys)
+            if last:
+                logits = np.asarray(logits_dev)  # THE queue-draining pull
+            self.stats.sync_pulls += 1
+            # non-final chunks have no head output: the first telemetry read
+            # below is their one queue-draining pull instead
+            ids = concat_route_telemetry(aux, "ids", self._moe_segs)  # [L,T,k]
+            weights = concat_route_telemetry(aux, "weights", self._moe_segs)
+            miss = concat_route_telemetry(aux, "miss", self._moe_segs)
+            h_rows = [
+                aux[f"route_h/seg{si}"][r]
+                for si, r in self._moe_pos
+            ]                                   # per MoE layer: [T, D] device
+            missed = np.flatnonzero(miss.reshape(miss.shape[0], -1).any(axis=1))
+            start_moe = (
+                int(missed[0])
+                if (missed.size and self.rescfg.host_compute_misses)
+                else self.num_moe_layers
+            )
+            start_li = (
+                self._moe_layer_li[start_moe]
+                if start_moe < self.num_moe_layers
+                else len(self.layers)
+            )
+            self._account_step_prefix(ids, miss, start_li, cur, tokens=c)
+            if start_li < len(self.layers):
+                # the replay patches authoritative rows in place; telemetry
+                # views of device buffers are read-only, so copy first
+                ids, weights, miss = (
+                    np.array(a) for a in (ids, weights, miss)
+                )
+                replay_logits = self._replay_prefill_chunk(
+                    aux, start_moe, start_li, cur, c,
+                    ids, weights, miss, h_rows, with_head=last,
+                )
+                if last:
+                    logits = replay_logits
+            self._rotate_chunk_boundary(ids, weights, miss, h_rows)
+            cur += c
+        return logits
+
+    def _replay_prefill_chunk(
+        self,
+        aux: Dict[str, jax.Array],
+        start_moe: int,
+        start_li: int,
+        cur_len: int,
+        chunk: int,
+        ids_all: np.ndarray,             # [L, T, k] — patched in place
+        weights_all: np.ndarray,
+        miss_all: np.ndarray,
+        h_rows: List[jax.Array],         # per MoE layer [T, D] — patched too
+        with_head: bool = True,
+    ) -> Optional[np.ndarray]:
+        """Exact re-execution of a prefill-chunk SUFFIX after an observed miss
+        — :meth:`_replay_fused` at chunk width. Layers before ``start_li`` saw
+        exactly what the layer walk would have computed, so their outputs and
+        KV writes stand; the suffix re-runs per layer from the chunk's saved
+        block input (``route_x`` [T, D] reshaped to [B, C, D]) against the
+        same residency the launch gathered from, host-correcting between
+        layers. Re-running a chunk's attention overwrites the very cache
+        slots the optimistic pass wrote (window-free caches only — the fused
+        gate), so the post-launch donated state is a valid replay substrate.
+
+        The replayed layers' AUTHORITATIVE routing and hiddens are patched
+        into the caller's telemetry arrays, so the boundary rotation consumes
+        exactly what the walk baseline would have produced — residency after
+        the chunk is bit-identical across paths. ``with_head=False`` (every
+        chunk but the prompt's last) skips the lm-head GEMM and its logits
+        pull — only the final chunk's logits are consumed.
+        """
+        si0, r0 = self._moe_pos[start_moe]
+        x = aux[f"route_x/seg{si0}"][r0].reshape(self.batch, chunk, -1)
+        self.stats.device_dispatches += 1             # device-side slice
+        cur = jnp.int32(cur_len)
+        clock = self.clock
+        for li in range(start_li, len(self.layers)):
+            kind, p_l = self.layers[li]
+            state = self._layer_state(li)
+            if kind == "attn_moe":
+                moe_li = self.moe_index[li]
+                attn_half, moe_half = self._block_fn(kind, "chunk", routed=True)
+                x_mid, h2, ids_dev, w_dev, new_state = attn_half(p_l, x, state, cur)
+                slots_tree = self.manager.stores[moe_li].as_pytree()
+                lut_dev = self.manager.device_lut(moe_li)
+                x, miss_dev = moe_half(
+                    p_l, x_mid, h2, ids_dev, w_dev, slots_tree, lut_dev
+                )
+                self.stats.device_dispatches += 2
+                ids = np.asarray(ids_dev)
+                weights = np.asarray(w_dev)
+                miss = np.asarray(miss_dev)
+                self.stats.sync_pulls += 1
+                self.stats.replay_pulls += 1
+                self.manager.record_routing(moe_li, ids, miss)
+                if miss.any() and self.rescfg.host_compute_misses:
+                    x = self._host_correct(x, moe_li, h2, ids, weights, miss)
+                ids_all[moe_li] = ids
+                weights_all[moe_li] = weights
+                miss_all[moe_li] = miss
+                h_rows[moe_li] = h2.reshape(-1, x.shape[-1])
+                flops, byts = self._layer_cost(
+                    kind, x.shape, cur_len, hits=int((~miss).sum())
+                )
+                clock.compute(self.cost.compute_s(flops, byts))
+            else:
+                (block,) = self._block_fn(kind, "chunk")
+                x, new_state = block(p_l, x, state if state else {}, cur)
+                self.stats.device_dispatches += 1
+                flops, byts = self._layer_cost(kind, x.shape, cur_len, hits=0)
+                clock.compute(self.cost.compute_s(flops, byts), needs_dma=False)
+            self._set_layer_state(li, new_state)
+        self.stats.prefill_replays += 1
+        if not with_head:
+            return None
+        logits = np.asarray(self._lm_head(x[:, -1:])[:, 0])
+        self.stats.sync_pulls += 1
+        self.stats.replay_pulls += 1
+        return logits
 
     def decode(
         self,

@@ -6,6 +6,26 @@ memory) and a ``SlotStore`` per MoE layer (the rotating accelerator-resident
 subset). ``prepare_layer`` runs the policy's proactive transition and executes
 the resulting uploads; ``resolve`` maps routed expert ids through the LUT and
 classifies hits/misses.
+
+Exactness invariant: residency state NEVER changes what an engine emits —
+only where compute happens. Misses are classified (in-kernel on the hot
+paths, via ``resolve`` on the walk) and corrected by the owning engine
+(host GEMM + suffix replay / KV rollback), so outputs stay bit-identical to
+full residency; under int8/int4 stores the correction runs against
+dequant∘quant weights, keeping quantized serving exactness-clean within its
+format.
+
+Telemetry→transition map (the host half of each compiled step): the fused
+engines hand one step's device-classified telemetry to
+``rotate_from_telemetry`` (or a speculative window's to
+``rotate_window_from_telemetry``, per-committed-step-equivalent with
+uploads coalesced to the last write per slot): ``ids``/``weights`` fold into
+the ``DemandPredictor`` EMA, ``miss`` + ``ids`` land in ``LayerStats`` via
+``record_routing``, and ``demand_next`` (the pre-gating GEMM: on-device for
+decode, the shared chunk-boundary program for chunked prefill) drives
+``policy.prepare`` → ``RotaryRing`` transition → batched ``SlotStore``
+uploads (one donated scatter per weight tensor per rotated layer) and
+incremental device-LUT patches.
 """
 from __future__ import annotations
 

@@ -52,6 +52,10 @@ class EngineStats:
                                     # sync_pulls; lets the speculative window's
                                     # 1-pull-per-window bound be checked net of
                                     # the exactness machinery's own reads)
+    prefill_chunks: int = 0         # chunked-prefill launches (fused: ONE
+                                    # compiled launch + one queue-draining pull
+                                    # per chunk; walk: one chunk of the layer walk)
+    prefill_replays: int = 0        # prefill chunks suffix-replayed after a miss
     spec_windows: int = 0           # speculative windows launched
     drafted_tokens: int = 0         # tokens self-drafted inside spec windows
     accepted_tokens: int = 0        # drafted tokens that committed (greedy
@@ -115,6 +119,8 @@ class EngineStats:
             "lut_patch_dispatches": self.lut_patch_dispatches,
             "upload_dispatches": self.upload_dispatches,
             "replayed_steps": self.replayed_steps,
+            "prefill_chunks": self.prefill_chunks,
+            "prefill_replays": self.prefill_replays,
             "spec_windows": self.spec_windows,
             "drafted_tokens": self.drafted_tokens,
             "accepted_tokens": self.accepted_tokens,

@@ -42,6 +42,11 @@ def main() -> None:
     ap.add_argument("--spec-cap", type=int, default=4,
                     help="batch-engine per-row speculative length cap "
                          "(1 disables speculation)")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="rotary-engine chunked prefill: power-of-two chunk "
+                         "length (0 = legacy full-sequence layer walk). Long "
+                         "prompts ingest at one compiled launch + one "
+                         "coalesced rotation window per chunk")
     ap.add_argument("--quantization", default="none",
                     choices=sorted(QUANT_CHOICES),
                     help="slot-store weight format (int4 = grouped "
@@ -83,6 +88,7 @@ def main() -> None:
             ),
             rt=rt, batch=b, host_routing=args.host_routing,
             spec_k=max(1, args.spec_k),
+            prefill_chunk=args.prefill_chunk or None,
         )
         # serve requests in decode groups of --batch (device-resident hot path
         # amortizes the per-step host interaction over all rows of the group)

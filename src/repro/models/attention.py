@@ -283,6 +283,97 @@ def _cache_capacity(acfg: AttentionConfig, cache_len: int) -> int:
     return cache_len
 
 
+def attention_prefill_chunk(
+    p: Params,
+    acfg: AttentionConfig,
+    x: jax.Array,
+    cache: Dict[str, jax.Array],
+    cur_len: jax.Array,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Chunked prefill: append ``C`` positions to an existing cache and attend
+    against everything cached so far (the chunk included).
+
+    x [B, C, D]; cache k/v [B, cap, Hkv, dh]; ``cur_len`` = tokens already
+    cached, scalar or per-row [B]. The chunk's KV is written at ring slots
+    ``(cur_len + j) % cap``; every cache position is scored with a per-query
+    validity mask (masked positions get exactly-zero probability mass), so
+    the same static-shape program serves every chunk of the same length
+    regardless of where it starts.
+
+    Window-free caches score the post-write cache: slot index == absolute
+    position — the same key layout the full-sequence path sees, so the
+    context matches :func:`attention_prefill` up to appended exact-zero slots
+    (bitwise in eager execution; the engine's binding bit-identity contract
+    is between its two CHUNKED paths, which share this very function). Ring
+    caches (sliding window) instead score the PRE-write cache concatenated
+    with the chunk's own K/V, because a later chunk position may overwrite a
+    previous-lap slot an earlier chunk query still needs; that path is exact
+    in masking but not index-identical to the full-sequence layout. (Under
+    the engine's current gating — prefill always starts at ``cur_len == 0``
+    and is capped at the cache capacity — a chunk never wraps the ring, so
+    the previous-lap reconstruction is defense-in-depth for future
+    wrap-capable callers: continuation prefill at ``cur_len > 0``, or
+    windowed prompts longer than the window.)
+    """
+    b, c, _ = x.shape
+    h, hkv, dh = acfg.num_heads, acfg.num_kv_heads, acfg.head_dim
+    g = h // hkv
+    cl = jnp.broadcast_to(jnp.asarray(cur_len, jnp.int32), (b,))        # [B]
+    qpos = cl[:, None] + jnp.arange(c, dtype=jnp.int32)[None, :]        # [B, C]
+    q, k_new, v_new = _project_qkv(p, acfg, x, qpos)
+
+    cap = cache["k"].shape[1]
+    assert c <= cap, f"prefill chunk ({c}) exceeds KV capacity ({cap})"
+    slots = qpos % cap                                                  # [B, C]
+    rows = jnp.arange(b)[:, None]
+    ck = cache["k"].at[rows, slots].set(k_new)
+    cv = cache["v"].at[rows, slots].set(v_new)
+    qg = q.reshape(b, c, hkv, g, dh)
+    # a single-query chunk would lower the QK/PV dots to the GEMV path, whose
+    # reduction tree differs bitwise from the GEMM every other extent takes:
+    # pad the QUERY side to extent 2 (zero row, discarded below) so a length-1
+    # tail chunk scores through the same kernel as the full-sequence pass
+    qpos_q = qpos                               # query-side positions [B, c_eff]
+    c_eff = c
+    if c == 1:
+        qg = jnp.concatenate([qg, jnp.zeros_like(qg)], axis=1)
+        qpos_q = jnp.concatenate([qpos, qpos], axis=1)
+        c_eff = 2
+
+    if acfg.window is None:
+        # slot i holds position i (no wrap: the whole sequence fits cap); the
+        # causal mask alone hides unwritten and future-chunk slots
+        k_all, v_all = ck, cv
+        kpos = jnp.broadcast_to(jnp.arange(cap, dtype=jnp.int32)[None, :],
+                                (b, cap))                               # [B,cap]
+    else:
+        # ring: score pre-write cache + chunk K/V so previous-lap entries a
+        # chunk write overwrote stay visible to earlier chunk queries. Slot i
+        # pre-chunk holds the newest position < cur_len congruent to i mod
+        # cap; never-written slots (and an empty cache) reconstruct negative
+        k_all = jnp.concatenate([cache["k"], k_new], axis=1)   # [B, cap+C, ..]
+        v_all = jnp.concatenate([cache["v"], v_new], axis=1)
+        idx = jnp.arange(cap, dtype=jnp.int32)[None, :]
+        end0 = cl[:, None] - 1                  # newest pre-chunk position [B,1]
+        kpos = jnp.concatenate([end0 - (end0 - idx) % cap, qpos], axis=1)
+
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k_all,
+                   preferred_element_type=jnp.float32)
+    s = s / math.sqrt(dh)
+    if acfg.logit_soft_cap is not None:
+        s = acfg.logit_soft_cap * jnp.tanh(s / acfg.logit_soft_cap)
+    valid = (kpos[:, None, :] >= 0) & (kpos[:, None, :] <= qpos_q[:, :, None])
+    if acfg.window is not None:
+        valid &= kpos[:, None, :] > qpos_q[:, :, None] - acfg.window
+    s = jnp.where(valid[:, None, None], s, NEG_INF)
+    probs = jax.nn.softmax(s, axis=-1)
+    ctx = jnp.einsum("bhgqk,bkhd->bqhgd", probs.astype(v_all.dtype), v_all,
+                     preferred_element_type=jnp.float32)
+    ctx = ctx[:, :c]                        # drop the GEMV-avoidance pad row
+    y = ctx.reshape(b, c, h, dh).astype(x.dtype).reshape(b, c, -1) @ p["wo"]
+    return y, {"k": ck, "v": cv}
+
+
 def attention_decode(
     p: Params,
     acfg: AttentionConfig,

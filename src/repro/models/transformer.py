@@ -188,7 +188,7 @@ def _apply_block(
     cfg: ModelConfig,
     rt: Runtime,
     x: jax.Array,
-    mode: str,                      # "train" | "prefill" | "decode"
+    mode: str,                      # "train" | "prefill" | "chunk" | "decode"
     state: Any,
     cur_len: Optional[jax.Array],
     residency: Optional[Dict[str, jax.Array]],
@@ -196,6 +196,10 @@ def _apply_block(
     b, s, d = x.shape
     aux: Aux = {}
     new_state = state
+    if mode == "chunk" and kind not in ("attn_mlp", "attn_moe", "local_attn"):
+        # a recurrent update consumes exactly one position of state per call;
+        # chunked prefill threads a KV cache through multi-token appends
+        raise ValueError(f"chunked prefill requires KV-cache blocks, got {kind!r}")
     if kind in ("attn_mlp", "attn_moe", "local_attn"):
         acfg = cfg.attention
         x_in = x                        # block input (decode telemetry: replay anchor)
@@ -228,6 +232,10 @@ def _apply_block(
                     q_chunk=rt.q_chunk, kv_chunk=rt.kv_chunk,
                     use_pallas=rt.sharding.use_pallas,
                 )
+        elif mode == "chunk":
+            y, new_state = attn.attention_prefill_chunk(
+                p["attn"], acfg, h, state, cur_len
+            )
         else:
             y, new_state = attn.attention_decode(
                 p["attn"], acfg, h, state, cur_len,
@@ -236,14 +244,14 @@ def _apply_block(
         x = x + y
         h = apply_norm(cfg.norm, p["ln2"], x)
         if kind == "attn_moe":
-            if mode == "decode":
+            if mode in ("decode", "chunk"):
                 slot_buffer = lut = None
                 if residency is not None:
                     slot_buffer, lut = residency["slots"], residency["lut"]
                 h2d = h.reshape(-1, d)
                 logits = moe_mod.router_logits(p["moe"], h2d)
                 ids, weights, moe_aux = moe_mod.topk_route(logits, cfg.moe)
-                if (residency is None and rt.mesh is not None
+                if (mode == "decode" and residency is None and rt.mesh is not None
                         and rt.sharding.moe_impl == "epsum"):
                     # §Perf: EP decode — local experts only + one [T,D] psum,
                     # instead of all-gathering the expert store per layer
@@ -627,6 +635,38 @@ def decode_model(
     x = embed_tokens(cfg, params, token[:, None])
     x = rt.constrain(x, P(rt.dp_spec, None, None))
     h, state, aux = _run_stack(cfg, params, rt, x, "decode", state, cur_len, residency)
+    logits = lm_logits(cfg, params, h[:, -1:])[:, 0]
+    return logits, state, aux
+
+
+def prefill_chunk_model(
+    cfg: ModelConfig,
+    params: Params,
+    tokens: jax.Array,           # [B, C] int32: the chunk's token positions
+    state: Any,
+    cur_len: jax.Array,          # scalar or [B] int32: tokens already cached
+    rt: Runtime,
+    residency: Optional[Any] = None,
+    with_head: bool = True,
+) -> Tuple[Optional[jax.Array], Any, Aux]:
+    """One prefill chunk: append ``C`` prompt positions to the decode state.
+
+    The multi-token sibling of :func:`decode_model` — the same stacked scan,
+    ``"chunk"`` mode blocks (:func:`attention_prefill_chunk` appends the
+    chunk's KV; the MoE half runs the routed/gathered path over all B*C chunk
+    tokens, optionally through the residency slot LUT, emitting the same
+    ``route_*`` telemetry decode does). Requires KV-cache-only block kinds.
+
+    Returns (logits [B, V] at the chunk's LAST position, new state, aux);
+    ``with_head=False`` skips the lm-head GEMM and returns ``None`` logits —
+    only a prompt's FINAL chunk needs the head, and at real vocab sizes the
+    [D, V] GEMM plus the [B, V] pull is the dominant per-chunk waste.
+    """
+    x = embed_tokens(cfg, params, tokens)
+    x = rt.constrain(x, P(rt.dp_spec, None, None))
+    h, state, aux = _run_stack(cfg, params, rt, x, "chunk", state, cur_len, residency)
+    if not with_head:
+        return None, state, aux
     logits = lm_logits(cfg, params, h[:, -1:])[:, 0]
     return logits, state, aux
 

@@ -1,3 +1,29 @@
+"""Serving: continuous batching over the shared compiled hot paths.
+
+``ServingEngine`` drives a fixed decode batch through the SAME fused
+whole-stack step / speculative window programs the rotary engine compiles
+(donated KV, ragged per-row lengths); admission prefills whole groups
+through one shared compiled bucketed program and splices rows into the live
+batch KV. ``Scheduler`` owns admission (deadline feasibility from learned
+prefill/decode rates, power-of-two prefill buckets) and the per-row
+speculative-length policy. ``Sampler`` is host-side numpy (keeps the
+compiled step deterministic and donation-friendly) and carries the
+speculative ACCEPT rules.
+
+Exactness contract: throughput serving drops missed experts in-step
+(counted, rotation corrects the NEXT step) — it trades the rotary engine's
+bit-exactness for zero replay stalls; everything else is exact: ragged
+batching and KV splicing emit the same per-request tokens as running each
+request alone, bucketed admission matches batch-1 prefills row for row, and
+speculative ticks commit only tokens a sequential tick would have emitted
+(per-row KV rollback). Telemetry→host transitions: the tick's ``route_*``
+aux + on-device ``demand_next`` feed
+``RotaryResidencyManager.rotate_from_telemetry`` (windows:
+``rotate_window_from_telemetry`` with per-row accepted counts, so rejected
+positions never pollute the predictor EMA or the hit/miss accounting);
+measured prefill tok/s and accept rates feed the scheduler's admission and
+spec-length EMAs.
+"""
 from repro.serving.engine import ServingEngine  # noqa: F401
 from repro.serving.sampler import Sampler, SamplerConfig  # noqa: F401
 from repro.serving.scheduler import Request, Scheduler  # noqa: F401

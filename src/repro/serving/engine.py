@@ -2,9 +2,12 @@
 
 A fixed decode batch of ``num_slots`` rows runs one compiled ``decode_model``
 step per tick; rows are claimed/freed by the scheduler as requests arrive and
-finish (per-row ``lengths`` make the ragged batch exact). New requests are
-prefilled as batch-1 at the next power-of-two length bucket and their KV rows
-spliced into the live state.
+finish (per-row ``lengths`` make the ragged batch exact). Each tick's
+admitted requests prefill together through ONE shared compiled bucketed
+program (the scheduler picks the power-of-two bucket, rows pad to the
+power-of-two cover of the group size with per-row ``last_index``, and each
+row's KV splices into the live state) — per-row outputs identical to batch-1
+prefills; recurrent archs keep the exact-length batch-1 path.
 
 Rotary residency in this path rotates slots BETWEEN steps from the previous
 step's routing telemetry (route_* aux): the compiled step computes resident
@@ -61,11 +64,22 @@ class ServingEngine:
         sampler: Optional[SamplerConfig] = None,
         eos: Optional[int] = None,
         spec_cap: int = 4,
+        bucketed_prefill: bool = True,
     ):
         """``spec_cap`` bounds per-row speculative decode: when sampling is
         greedy and the stack is KV-cache-only, ticks run self-drafting windows
         through ``build_fused_window_step``, sized by the SCHEDULER's learned
-        per-row speculative lengths (``spec_cap=1`` disables speculation)."""
+        per-row speculative lengths (``spec_cap=1`` disables speculation).
+
+        ``bucketed_prefill`` routes each tick's admitted requests through ONE
+        shared compiled prefill program at the scheduler-chosen power-of-two
+        bucket (rows padded to the power-of-two cover of the group size,
+        per-row ``last_index`` for the ragged lengths, KV spliced into the
+        live batch state) instead of one batch-1 program launch per request.
+        Per-row outputs are identical
+        to the batch-1 path — the program scans the rows through the very
+        same per-row prefill computation. Recurrent archs need exact-length
+        prefills and keep the batch-1 path regardless."""
         self.cfg = cfg
         self.params = params
         self.rt = rt or Runtime(cache_len=1024)
@@ -89,7 +103,10 @@ class ServingEngine:
             cap = attn_mod._cache_capacity(cfg.attention, self.rt.cache_len)
             self._spec_cap_eff = max(1, min(spec_cap, cap))
             self._spec_ok = self._spec_cap_eff > 1
-        self.scheduler = Scheduler(num_slots, spec_cap=self._spec_cap_eff)
+        self.scheduler = Scheduler(
+            num_slots, spec_cap=self._spec_cap_eff,
+            max_prompt_len=self.rt.cache_len,
+        )
 
         self.state = tfm.zero_state(cfg, self.batch, self.rt.cache_len)
         self.lengths = np.zeros((self.batch,), np.int32)
@@ -135,7 +152,12 @@ class ServingEngine:
         )
         self._moe_segs = moe_segments(cfg)
         self._prefill_cache: Dict[int, Any] = {}
+        self._bucket_prefill_cache: Dict[int, Any] = {}
         self._window_cache: Dict[int, Any] = {}
+        self._has_recurrence = any(
+            k in ("mlstm", "slstm", "rglru") for k in cfg.layer_kinds
+        )
+        self._bucketed_prefill = bucketed_prefill and not self._has_recurrence
 
     def _window_fns(self, k: int):
         """Compiled (window step, KV snapshot, KV rollback) for window size
@@ -157,11 +179,8 @@ class ServingEngine:
         decode masks cache positions >= true length so pads never score).
         Recurrent archs use exact lengths — pads would pollute the state."""
         s = len(prompt)
-        has_recurrence = any(
-            k in ("mlstm", "slstm", "rglru") for k in self.cfg.layer_kinds
-        )
-        bucket = s if has_recurrence else min(
-            max(16, 1 << (s - 1).bit_length()), self.rt.cache_len
+        bucket = s if self._has_recurrence else Scheduler.prefill_bucket(
+            [s], self.rt.cache_len
         )
         cold = bucket not in self._prefill_cache
         if cold:
@@ -185,6 +204,74 @@ class ServingEngine:
             self.scheduler.observe_prefill_rate(s / dt)
         return logits, state, s
 
+    def _prefill_bucketed(self, admitted: List[Request]) -> List[Any]:
+        """Prefill one admission group through the SHARED compiled bucketed
+        program: the scheduler picks the power-of-two bucket covering every
+        admitted prompt, the rows pad to the power-of-two cover of the group
+        size (compile cache keyed on (bucket, rows) — at most log2(batch)
+        row shapes per bucket, and a single admission doesn't pay the whole
+        batch's worth of pad-row prefill work or depress the admission-rate
+        EMA), and ONE program launch scans every row through exactly the
+        per-row computation ``_prefill_one`` runs — per-row outputs match
+        the batch-1 splice-in path. Rows splice into the live batch KV with
+        the existing ragged machinery (per-row ``last_index`` / ``lengths``).
+
+        Returns [(request, logits [1, V], row_state)] per admitted request.
+        """
+        lens = [len(r.prompt) for r in admitted]
+        bucket = Scheduler.prefill_bucket(lens, self.rt.cache_len)
+        rows = min(self.batch, 1 << (len(admitted) - 1).bit_length())
+        key = (bucket, rows)
+        cold = key not in self._bucket_prefill_cache
+        if cold:
+            def fn(params, tokens, last):          # [rows, bucket], [rows]
+                def row(_, xs):
+                    tok, li = xs
+                    logits, state = tfm.prefill_model(
+                        self.cfg, params, tok[None], self.rt,
+                        last_index=li[None],
+                    )
+                    return None, (logits[0], state)
+
+                _, (logits, states) = jax.lax.scan(row, None, (tokens, last))
+                return logits, states
+
+            self._bucket_prefill_cache[key] = jax.jit(fn)
+        padded = np.zeros((rows, bucket), np.int32)
+        last = np.zeros((rows,), np.int32)
+        for i, req in enumerate(admitted):
+            padded[i, : len(req.prompt)] = req.prompt
+            last[i] = len(req.prompt) - 1
+        t0 = time.perf_counter()
+        logits, states = self._bucket_prefill_cache[key](
+            self.params, jnp.asarray(padded), jnp.asarray(last)
+        )
+        logits.block_until_ready()
+        dt = time.perf_counter() - t0
+        if not cold and dt > 0:
+            # steady-state sample only — a cold bucket's wall time is
+            # dominated by trace/compile and would poison the admission EMA
+            self.scheduler.observe_prefill_rate(sum(lens) / dt)
+        logits_np = np.asarray(logits)
+        out = []
+        for i, req in enumerate(admitted):
+            row_state = jax.tree.map(lambda a, i=i: a[i], states)
+            out.append((req, logits_np[i : i + 1], row_state))
+        return out
+
+    def _prefill_admitted(self, admitted: List[Request]) -> List[Any]:
+        """Admission prefill: the shared bucketed program by default, batch-1
+        programs for recurrent archs / ``bucketed_prefill=False``."""
+        if not admitted:
+            return []
+        if self._bucketed_prefill:
+            return self._prefill_bucketed(admitted)
+        out = []
+        for req in admitted:
+            logits, row_state, _ = self._prefill_one(req.prompt)
+            out.append((req, logits, row_state))
+        return out
+
     def _splice_row(self, slot: int, row_state: Any) -> None:
         """Insert a batch-1 prefill state into batch row ``slot``."""
         def splice(dst, src):
@@ -203,10 +290,11 @@ class ServingEngine:
         t0 = time.perf_counter()
         while not self.scheduler.idle and ticks < max_ticks:
             now = time.perf_counter()
-            for req in self.scheduler.admit(now):
-                logits, row_state, true_len = self._prefill_one(req.prompt)
+            for req, logits, row_state in self._prefill_admitted(
+                self.scheduler.admit(now)
+            ):
                 self._splice_row(req.slot, row_state)
-                self.lengths[req.slot] = true_len
+                self.lengths[req.slot] = len(req.prompt)
                 tok = int(self.sampler(np.asarray(logits))[0])
                 self.next_token[req.slot] = tok
                 self.active[req.slot] = True

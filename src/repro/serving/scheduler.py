@@ -40,8 +40,13 @@ class Scheduler:
     def __init__(self, num_slots: int, *, est_tok_s: float = 20.0,
                  est_prefill_tok_s: Optional[float] = None,
                  spec_cap: int = 8, spec_low: float = 0.7,
-                 spec_high: float = 0.95):
+                 spec_high: float = 0.95,
+                 max_prompt_len: Optional[int] = None):
         self.num_slots = num_slots
+        # prompts longer than the engine's KV capacity are rejected at
+        # submit time (the prefill buckets clamp to the cache, so an
+        # over-long prompt cannot be admitted without corrupting its row)
+        self.max_prompt_len = max_prompt_len
         self.queue: List = []
         self.running: Dict[int, Request] = {}       # slot -> request
         self.free_slots = list(range(num_slots))
@@ -70,8 +75,12 @@ class Scheduler:
                deadline_s: Optional[float] = None) -> Request:
         req = Request(next(self._uid), np.asarray(prompt, np.int32), max_new,
                       deadline_s, submitted_at=now)
+        too_long = (
+            self.max_prompt_len is not None
+            and len(prompt) > self.max_prompt_len
+        )
         est = len(prompt) / self.est_prefill_tok_s + max_new / self.est_tok_s
-        if deadline_s is not None and est > deadline_s:
+        if too_long or (deadline_s is not None and est > deadline_s):
             req.done = True
             req.truncated = True
             self.rejected.append(req)
@@ -110,6 +119,16 @@ class Scheduler:
     def observe_prefill_rate(self, tok_s: float) -> None:
         """Measured prefill tokens/s feedback (engine calls this per prefill)."""
         self.est_prefill_tok_s = 0.9 * self.est_prefill_tok_s + 0.1 * tok_s
+
+    @staticmethod
+    def prefill_bucket(lengths: List[int], cache_len: int) -> int:
+        """Admission bucket for one prefill group: the power-of-two length
+        (min 16, clamped to the cache) covering every admitted prompt, so the
+        whole group runs through ONE shared compiled prefill program instead
+        of one batch-1 program launch per request. The scheduler owns the
+        choice so the engine's compile cache is keyed purely on bucket."""
+        m = max(lengths)
+        return min(max(16, 1 << (m - 1).bit_length()), cache_len)
 
     # -- per-row speculative lengths --------------------------------------
     def spec_len(self, slot: int) -> int:

@@ -1,6 +1,12 @@
 """Fused whole-stack decode: exactness vs the seed walk, replay under forced
 misses, O(1) dispatches per miss-free token, batched slot uploads, LUT patch
-regression, ring-delta seam, prefill-rate admission EMA."""
+regression, ring-delta seam, prefill-rate admission EMA.
+
+Chunked prefill hot path (PR 5): fused-chunk logits and post-prefill KV
+bit-identical to the chunked layer walk across residency modes and slot
+formats, dispatch bounds (one whole-stack launch + one queue-draining pull
+per chunk), power-of-two chunk plans, and bucketed serving admission matching
+the batch-1 splice-in path row for row."""
 import dataclasses
 
 import jax
@@ -14,6 +20,7 @@ from repro.core import RotaryEngine, SlotStore
 from repro.core.rotation import RotaryRing
 from repro.models import init_params
 from repro.models.transformer import Runtime
+from repro.serving.scheduler import Scheduler
 
 
 def _f32_setup():
@@ -172,6 +179,172 @@ def test_scheduler_prefill_rate_ema():
     assert sch.est_prefill_tok_s > 200.0
     r2 = sch.submit(np.zeros(400, np.int32), max_new=1, now=0.0, deadline_s=5.0)
     assert not r2.truncated                       # now admissible
+
+
+# ===========================================================================
+# chunked prefill hot path
+# ===========================================================================
+def _stacked_kv(eng):
+    """Engine decode state as one stacked pytree, whichever layout it keeps."""
+    if getattr(eng, "_dstate", None) is not None:
+        return eng._dstate
+    return eng._stack_state(eng.state)
+
+
+def _chunk_engines(cfg, params, mode, slots, quant=None, chunk=8):
+    def mk(**kw):
+        return RotaryEngine(
+            cfg, params,
+            ResidencyConfig(mode=mode, num_slots=slots, prefetch_margin=2,
+                            quantization=quant),
+            rt=Runtime(cache_len=64), batch=2, **kw,
+        )
+
+    return mk(prefill_chunk=chunk), mk(prefill_chunk=chunk, fused_decode=False)
+
+
+def test_chunked_prefill_exactness(rng):
+    """The tentpole invariant: fused chunked prefill (ONE launch per chunk)
+    produces logits AND post-prefill KV bit-identical to the chunked layer
+    walk, across full / prefetch-covered rotary / slot-starved rotary (the
+    starved case forces per-chunk suffix replay), and the greedy continuation
+    matches the legacy full-sequence prefill token for token."""
+    cfg, params = _f32_setup()
+    prompt = rng.integers(0, 200, (2, 21)).astype(np.int32)   # plan [8,8,4,1]
+    for mode, slots in (("full", 0), ("rotary", 8), ("rotary", 5)):
+        fused, walk = _chunk_engines(cfg, params, mode, slots)
+        lg_f = fused.prefill(prompt)
+        lg_w = walk.prefill(prompt)
+        np.testing.assert_array_equal(lg_f, lg_w, err_msg=f"{mode}/{slots}")
+        for a, b in zip(
+            jax.tree.leaves(_stacked_kv(fused)), jax.tree.leaves(_stacked_kv(walk))
+        ):
+            np.testing.assert_array_equal(
+                np.asarray(a), np.asarray(b), err_msg=f"KV {mode}/{slots}"
+            )
+        legacy = RotaryEngine(
+            cfg, params,
+            ResidencyConfig(mode=mode, num_slots=slots, prefetch_margin=2),
+            rt=Runtime(cache_len=64), batch=2,
+        )
+        o_legacy = legacy.generate(prompt, 8)
+        np.testing.assert_array_equal(o_legacy, fused.decode(lg_f, 8))
+        np.testing.assert_array_equal(o_legacy, walk.decode(lg_w, 8))
+        if (mode, slots) == ("rotary", 5):
+            # the starved case actually exercised the chunk replay machinery
+            assert fused.stats.prefill_replays > 0
+            assert fused.stats.misses > 0
+
+
+@pytest.mark.parametrize("quant", ["int8", "int4"])
+def test_chunked_prefill_exactness_quantized(rng, quant):
+    """Same bit-identity on quantized slot stores, in the slot-starved regime
+    whose misses replay against the dequantized weights (and the covered
+    regime as a miss-free control)."""
+    cfg, params = _f32_setup()
+    prompt = rng.integers(0, 200, (2, 13)).astype(np.int32)
+    for mode, slots in (("rotary", 8), ("rotary", 5)):
+        fused, walk = _chunk_engines(cfg, params, mode, slots, quant=quant)
+        lg_f = fused.prefill(prompt)
+        lg_w = walk.prefill(prompt)
+        np.testing.assert_array_equal(lg_f, lg_w, err_msg=f"{quant}/{slots}")
+        for a, b in zip(
+            jax.tree.leaves(_stacked_kv(fused)), jax.tree.leaves(_stacked_kv(walk))
+        ):
+            np.testing.assert_array_equal(
+                np.asarray(a), np.asarray(b), err_msg=f"KV {quant}/{slots}"
+            )
+        np.testing.assert_array_equal(fused.decode(lg_f, 6), walk.decode(lg_w, 6))
+    assert fused.stats.prefill_replays > 0          # starved case replayed
+
+
+def test_chunked_prefill_dispatch_counts(rng):
+    """Miss-free fused chunked prefill: exactly ONE whole-stack launch and
+    ONE queue-draining pull per chunk, zero replays."""
+    from repro.core.engine import prefill_chunk_plan
+
+    cfg, params = _f32_setup()
+    prompt = rng.integers(0, 200, (2, 21)).astype(np.int32)
+    eng = _engine(cfg, params, "full", 0, prefill_chunk=8)
+    pulls0 = eng.stats.sync_pulls
+    eng.prefill(prompt)
+    n = len(prefill_chunk_plan(21, 8))
+    assert eng.stats.prefill_chunks == n
+    assert eng.stats.sync_pulls - pulls0 == n
+    assert eng.stats.prefill_replays == 0
+    assert eng.stats.misses == 0
+
+
+def test_prefill_chunk_plan():
+    """Chunk plans are power-of-two lengths summing to the prompt, with the
+    steady-state chunk repeated and a descending power-of-two tail (bounded
+    compile cache)."""
+    from repro.core.engine import prefill_chunk_plan
+
+    assert prefill_chunk_plan(21, 8) == [8, 8, 4, 1]
+    assert prefill_chunk_plan(64, 16) == [16, 16, 16, 16]
+    assert prefill_chunk_plan(1, 64) == [1]
+    for s in (1, 7, 16, 21, 100, 257):
+        for c in (1, 4, 32):
+            plan = prefill_chunk_plan(s, c)
+            assert sum(plan) == s
+            assert all(p & (p - 1) == 0 for p in plan)
+            assert all(p <= c for p in plan)
+    with pytest.raises(AssertionError):
+        prefill_chunk_plan(8, 6)                    # chunk not a power of two
+
+
+def test_chunked_prefill_flag_validation():
+    """KV-only window-free stacks enable both chunked paths; a non-power-of-
+    two chunk length is rejected up front."""
+    cfg, params = _f32_setup()
+    eng = _engine(cfg, params, "full", 0, prefill_chunk=8)
+    assert eng._chunk_prefill_ok and eng._chunk_prefill_fused_ok
+    with pytest.raises(AssertionError):
+        _engine(cfg, params, "full", 0, prefill_chunk=6)   # not a power of two
+
+
+def test_bucketed_admission_matches_batch1(rng):
+    """The serving tentpole: admission through the shared compiled bucketed
+    program (rows padded to the engine batch, spliced with the ragged
+    machinery) emits the same per-request outputs as the batch-1 splice-in
+    path — dense arch and rotary-residency MoE arch alike."""
+    from repro.serving import ServingEngine
+
+    for arch, res in (
+        ("starcoder2-3b", None),
+        ("qwen2-moe-a2.7b", ResidencyConfig(mode="rotary", num_slots=5)),
+    ):
+        cfg, params = params_for(arch)
+        prompts = [rng.integers(0, cfg.vocab_size, int(n)).astype(np.int32)
+                   for n in (5, 9, 12)]
+        outs = {}
+        for bucketed in (False, True):
+            eng = ServingEngine(
+                cfg, params, rt=Runtime(cache_len=64), num_slots=2,
+                residency=res, bucketed_prefill=bucketed,
+            )
+            reqs = [eng.submit(p, max_new=5) for p in prompts]
+            eng.run()
+            outs[bucketed] = [r.output for r in reqs]
+        assert outs[True] == outs[False], arch
+
+
+def test_scheduler_prefill_bucket():
+    """The scheduler owns the admission bucket: power-of-two cover of the
+    longest admitted prompt, floored at 16 and clamped to the cache (over-
+    capacity prompts never reach bucketing — submit rejects them)."""
+    assert Scheduler.prefill_bucket([5], 256) == 16
+    assert Scheduler.prefill_bucket([5, 17], 256) == 32
+    assert Scheduler.prefill_bucket([64], 256) == 64
+    assert Scheduler.prefill_bucket([1], 256) == 16
+    # a prompt longer than the cache is rejected at submit time instead of
+    # crashing mid-tick on the clamped bucket
+    sch = Scheduler(2, max_prompt_len=64)
+    r = sch.submit(np.zeros(65, np.int32), max_new=1, now=0.0)
+    assert r.done and r.truncated and r in sch.rejected
+    r2 = sch.submit(np.zeros(64, np.int32), max_new=1, now=0.0)
+    assert not r2.done
 
 
 def test_serving_feeds_prefill_rate(rng):

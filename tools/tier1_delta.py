@@ -30,22 +30,48 @@ def recorded_passed(changes: str) -> int:
     return 0
 
 
+def delta_payload(log_text: str, changes_text: str) -> dict:
+    """Machine-readable pass-count trajectory: what this run passed, what the
+    last landed PR recorded, and the delta. Embedded into BENCH_decode.json by
+    the decode hot-path benchmark so the trajectory is greppable per PR."""
+    cur = latest_passed(log_text)
+    prev = recorded_passed(changes_text)
+    return {"passed": cur, "recorded": prev, "delta": cur - prev}
+
+
+def payload_from_files(log_path: str, changes_path: str) -> "dict | None":
+    """``delta_payload`` from file paths; None when no pytest log exists yet
+    (callers embed the trajectory only when a tier-1 run has happened). The
+    log's mtime is stamped in as ``log_time`` so a consumer can tell a fresh
+    run from a stale log left over from before the benchmarked edit."""
+    import datetime
+    import os
+
+    try:
+        log = open(log_path).read()
+        mtime = os.path.getmtime(log_path)
+    except OSError:
+        return None
+    try:
+        changes = open(changes_path).read()
+    except OSError:
+        changes = ""
+    payload = delta_payload(log, changes)
+    payload["log_time"] = datetime.datetime.fromtimestamp(mtime).isoformat(
+        timespec="seconds"
+    )
+    return payload
+
+
 def main() -> None:
     if len(sys.argv) != 3:
         sys.exit(f"usage: {sys.argv[0]} <pytest-log> <CHANGES.md>")
-    try:
-        log = open(sys.argv[1]).read()
-    except OSError as e:
-        sys.exit(f"tier1_delta: cannot read pytest log: {e}")
-    try:
-        changes = open(sys.argv[2]).read()
-    except OSError:
-        changes = ""
-    cur = latest_passed(log)
-    prev = recorded_passed(changes)
+    payload = payload_from_files(sys.argv[1], sys.argv[2])
+    if payload is None:
+        sys.exit(f"tier1_delta: cannot read pytest log {sys.argv[1]!r}")
     print(
-        f"tier1: {cur} passed ({cur - prev:+d} vs the {prev} recorded in "
-        f"CHANGES.md)"
+        f"tier1: {payload['passed']} passed ({payload['delta']:+d} vs the "
+        f"{payload['recorded']} recorded in CHANGES.md)"
     )
 
 
