@@ -3,7 +3,7 @@ PYTHON ?= python
 SHELL := /bin/bash
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: dev-deps tier1 ci bench bench-decode smoke-int4 smoke-prefill
+.PHONY: dev-deps tier1 ci bench bench-decode smoke-int4 smoke-prefill smoke-serve-cb
 
 dev-deps:          ## install test-only deps (hypothesis property coverage)
 	$(PYTHON) -m pip install -r requirements-dev.txt
@@ -25,7 +25,15 @@ smoke-prefill:     ## long-prompt chunked-prefill smoke: rotary serve ingesting
 	  --residency rotary --batch 2 --requests 2 --prompt-len 96 --max-new 4 \
 	  --prefill-chunk 32 --cache-len 128
 
-ci: dev-deps tier1 smoke-int4 smoke-prefill ## "green" in one command: dev deps + tier-1 + int4 & prefill smokes
+smoke-serve-cb:    ## continuous-batching serve smoke: seeded Poisson arrivals
+                   ## joining/leaving live windows over the paged KV pool,
+                   ## rotary residency + speculative windows on the CB path
+	$(PYTHON) -m repro.launch.serve --arch qwen2-moe-a2.7b --engine batch \
+	  --residency rotary --spec-cap 4 --arrival-rate 40 --requests 6 \
+	  --batch-slots 4 --prompt-len 10 --max-new 6 --cache-len 64 \
+	  --kv-page-size 8
+
+ci: dev-deps tier1 smoke-int4 smoke-prefill smoke-serve-cb ## "green" in one command: dev deps + tier-1 + int4, prefill & CB-serve smokes
 
 bench:             ## all paper-table / kernel / hot-path benchmarks (emits BENCH_decode.json)
 	$(PYTHON) -m benchmarks.run

@@ -13,6 +13,7 @@ MODULES = [
     ("fig3_configs", "Fig. 3: configuration feasibility sweep"),
     ("residency_policies", "§4: rotary vs LRU vs static vs full"),
     ("decode_hot_path", "decode hot path: device-resident step vs seed engine"),
+    ("serving_load", "serving goodput: continuous batching vs group tick under Poisson load"),
     ("kernels_bench", "Pallas kernels vs references"),
     ("compression_bench", "int8+EF cross-pod gradient compression"),
 ]

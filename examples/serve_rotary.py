@@ -1,18 +1,23 @@
-"""Serving scenario: continuous batching with rotary residency, bucketed
-admission prefill, per-row speculative decode, and deadlines.
+"""Serving scenario: continuous batching over the paged KV pool with rotary
+residency, bucketed admission prefill, per-row speculative decode, and
+deadlines.
 
 Submits a mixed stream of requests (some with tight deadlines) against the
 compiled serving engine: admitted prompts prefill together through one
-shared compiled bucketed program, residency rotates between ticks from
-routing telemetry, and greedy rows self-draft up to ``spec_cap`` tokens per
-compiled window (per-row accept rates learned by the scheduler). Shows
-per-request outcomes and the residency/stall/speculation accounting.
+shared compiled bucketed program and splice into pages drawn from the KV
+pool, rows join/leave the live decode window as they arrive/finish (a
+finishing request's pages recycle immediately), residency rotates between
+window launches from routing telemetry, and greedy rows self-draft up to
+``spec_cap`` tokens per compiled window (per-row accept rates learned by
+the scheduler). Shows per-request outcomes, the residency/stall/speculation
+accounting, the page-pool counters, and the TTFT / inter-token latency
+percentiles.
 
     PYTHONPATH=src python examples/serve_rotary.py
 
 The CLI equivalent: ``python -m repro.launch.serve --engine batch
---residency rotary --spec-cap 4 --quantization int4`` (the rotary engine
-variant adds ``--prefill-chunk`` / ``--spec-k``).
+--residency rotary --spec-cap 4 --quantization int4 --arrival-rate 40``
+(the rotary engine variant adds ``--prefill-chunk`` / ``--spec-k``).
 """
 import numpy as np
 
@@ -38,6 +43,9 @@ def main():
         sampler=SamplerConfig(temperature=0.0, seed=0),
         spec_cap=4,
         bucketed_prefill=True,     # the default: one shared program per bucket
+        # paged KV pool (the default on KV-only stacks): 16-position pages,
+        # request-level joins between window launches
+        kv_page_size=16,
     )
     rng = np.random.default_rng(1)
     reqs = []
@@ -51,9 +59,13 @@ def main():
         status = "REJECTED (deadline)" if r.truncated and not r.output else \
                  ("truncated" if r.truncated else "ok")
         print(f"req {r.uid}: prompt={len(r.prompt):2d} out={len(r.output):2d} {status}")
-    s = eng.stats.summary()
+    s = eng.summary()              # engine stats + latency percentiles
     print("\nengine stats:", s)
     print(f"speculation: {s['spec_windows']} windows, accept_rate={s['accept_rate']}")
+    print(f"kv pool: {s['kv_pages_hwm']} pages peak, "
+          f"{s['kv_pages_allocated']} allocated / {s['kv_pages_released']} released")
+    print(f"latency: ttft p50/p99 = {s['ttft_p50_ms']}/{s['ttft_p99_ms']} ms, "
+          f"itl p50/p99 = {s['itl_p50_ms']}/{s['itl_p99_ms']} ms")
     print("completed:", len(done), "rejected:", len(eng.scheduler.rejected))
 
 

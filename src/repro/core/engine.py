@@ -194,9 +194,13 @@ def build_fused_decode_step(
     moe_segs = moe_segments(cfg)
     aux_fn = _demand_aux_fn(moe_segs, with_demand, keep_replay_anchor)
 
-    def step(params, routers_next, token, state, cur_len, residency):
+    def step(params, routers_next, token, state, cur_len, residency,
+             page_table=None):
+        # trailing page_table (serving's paged KV pool) keeps the 6-arg
+        # call signature every existing caller compiled against
         logits, new_state, aux = tfm.decode_model(
-            cfg, params, token, state, cur_len, rt, residency=residency
+            cfg, params, token, state, cur_len, rt, residency=residency,
+            page_table=page_table,
         )
         return logits, new_state, aux_fn(aux, routers_next)
 
@@ -315,11 +319,13 @@ def build_fused_window_step(
     moe_segs = moe_segments(cfg)
     aux_fn = _demand_aux_fn(moe_segs, with_demand, keep_replay_anchor)
 
-    def step(params, routers_next, token, state, cur_len, residency):
+    def step(params, routers_next, token, state, cur_len, residency,
+             page_table=None):
         return tfm.decode_window(
             cfg, params, token, state, cur_len, rt, k_steps,
             residency=residency,
             aux_fn=lambda aux: aux_fn(aux, routers_next),
+            page_table=page_table,
         )
 
     return jax.jit(step, donate_argnums=(3,) if donate_state else ())
@@ -341,10 +347,16 @@ def build_window_fns(
         cfg, rt, k, with_demand=with_demand, donate_state=True,
         keep_replay_anchor=keep_replay_anchor,
     )
-    snap = jax.jit(lambda state, cl: tfm.snapshot_kv_window(cfg, state, cl, k))
+    # trailing page_table: the serving engine passes its paged pool + per-row
+    # page tables through the same triple; contiguous callers are unchanged
+    snap = jax.jit(
+        lambda state, cl, page_table=None: tfm.snapshot_kv_window(
+            cfg, state, cl, k, page_table=page_table
+        )
+    )
     roll = jax.jit(
-        lambda state, saved, cl, keep: tfm.rollback_kv_window(
-            cfg, state, saved, cl, k, keep
+        lambda state, saved, cl, keep, page_table=None: tfm.rollback_kv_window(
+            cfg, state, saved, cl, k, keep, page_table=page_table
         ),
         donate_argnums=(0,),
     )

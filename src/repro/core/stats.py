@@ -62,6 +62,15 @@ class EngineStats:
                                     # self-draft: rejections come only from
                                     # residency misses, so accept-rate < 1 is
                                     # a KV-rollback / replay canary)
+    windows: int = 0                # serving decode launches over the paged
+                                    # pool (every continuous-batching tick is
+                                    # a window launch, size-1 included — the
+                                    # 1-launch + 1-pull contract is checked
+                                    # against this)
+    kv_pages_allocated: int = 0     # KV pool pages drawn from the free list
+    kv_pages_released: int = 0      # KV pool pages returned on request finish
+    kv_pages_hwm: int = 0           # peak pages simultaneously in use (the
+                                    # pool-pressure admission high-water mark)
 
     def layer(self, idx: int) -> LayerStats:
         return self.layers.setdefault(idx, LayerStats())
@@ -125,4 +134,8 @@ class EngineStats:
             "drafted_tokens": self.drafted_tokens,
             "accepted_tokens": self.accepted_tokens,
             "accept_rate": round(self.accept_rate, 4),
+            "windows": self.windows,
+            "kv_pages_allocated": self.kv_pages_allocated,
+            "kv_pages_released": self.kv_pages_released,
+            "kv_pages_hwm": self.kv_pages_hwm,
         }

@@ -6,11 +6,16 @@ Two engines (DESIGN.md §2):
     hidden-state-guided prefetch, host-GEMM miss correction. MoE archs only.
   * ``--engine batch``   — compiled continuous-batching engine
     (repro.serving.ServingEngine), any arch; optional rotary residency
-    rotating between steps.
+    rotating between steps. KV lives in a paged pool on KV-cache-only
+    stacks (``--kv-pages`` / ``--kv-page-size``); ``--arrival-rate`` replays
+    a seeded Poisson arrival trace against the live engine (request-level
+    joins between window launches) instead of submitting everything up
+    front.
 """
 from __future__ import annotations
 
 import argparse
+import time
 
 import jax
 import numpy as np
@@ -53,6 +58,21 @@ def main() -> None:
                          "two-nibbles-per-byte, ~4x smaller rotations)")
     ap.add_argument("--quant-group", type=int, default=64,
                     help="int4 rows per scale/min group (Q4_K_M-style)")
+    ap.add_argument("--arrival-rate", type=float, default=0.0,
+                    help="batch-engine Poisson arrival rate (requests/s): "
+                         "submit on a seeded arrival trace and tick the "
+                         "engine live — requests join/leave the window as "
+                         "they arrive/finish (0 = submit everything up "
+                         "front)")
+    ap.add_argument("--kv-pages", type=int, default=0,
+                    help="batch-engine KV pool size in pages (0 = auto: "
+                         "batch-slots full rows)")
+    ap.add_argument("--kv-page-size", type=int, default=16,
+                    help="KV pool page granularity in cache positions")
+    ap.add_argument("--warmup", action="store_true",
+                    help="pre-compile the batch-engine program family before "
+                         "serving (first-request latency then measures "
+                         "serving, not tracing)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -107,14 +127,40 @@ def main() -> None:
         cfg, params, rt=rt, num_slots=args.batch_slots, residency=rescfg,
         sampler=SamplerConfig(temperature=args.temperature, seed=args.seed),
         spec_cap=max(1, args.spec_cap),
+        kv_page_size=args.kv_page_size,
+        kv_pages=args.kv_pages or None,
     )
-    for _ in range(args.requests):
-        plen = int(rng.integers(4, args.prompt_len + 1))
-        eng.submit(rng.integers(0, cfg.vocab_size, plen), args.max_new)
-    done = eng.run()
+    if args.warmup:
+        n = eng.warmup(max_prompt_len=args.prompt_len)
+        print(f"warmup: {n} programs compiled")
+    prompts = [
+        rng.integers(0, cfg.vocab_size, int(rng.integers(4, args.prompt_len + 1)))
+        for _ in range(args.requests)
+    ]
+    if args.arrival_rate > 0:
+        # live Poisson replay: requests join the window at their arrival
+        # times and the engine ticks between joins (continuous batching)
+        at = np.cumsum(rng.exponential(1.0 / args.arrival_rate, args.requests))
+        at -= at[0]
+        i, t0 = 0, time.perf_counter()
+        while i < len(prompts) or not eng.scheduler.idle:
+            now = time.perf_counter() - t0
+            while i < len(prompts) and at[i] <= now:
+                eng.submit(prompts[i], args.max_new)
+                i += 1
+            if not eng.scheduler.idle:
+                eng.tick()
+            elif i < len(prompts):
+                time.sleep(min(1e-3, max(0.0, at[i] - now)))
+        eng.stats.wall_s += time.perf_counter() - t0
+        done = eng.scheduler.completed
+    else:
+        for p in prompts:
+            eng.submit(p, args.max_new)
+        done = eng.run()
     for r in done:
         print(f"req {r.uid}: prompt_len={len(r.prompt)} -> {r.output}")
-    print("stats:", eng.stats.summary())
+    print("stats:", eng.summary())
 
 
 if __name__ == "__main__":

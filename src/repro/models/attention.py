@@ -382,6 +382,7 @@ def attention_decode(
     cur_len: jax.Array,
     *,
     use_pallas: bool = False,
+    page_table: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """One-token decode. x [B,1,D]; cache k/v [B,cap,Hkv,dh].
 
@@ -389,6 +390,18 @@ def attention_decode(
     from the continuous-batching scheduler). Static shapes: the new KV is
     written at slot ``cur_len % cap`` (ring semantics make full and windowed
     caches uniform); all cap positions are scored with invalid ones masked.
+
+    ``page_table`` [B, cap // page_size] switches the cache to the serving
+    engine's PAGED pool layout: k/v are SHARED planes [P, page_size, Hkv, dh]
+    and each row's logical slot ``s`` lives at physical
+    ``(page_table[b, s // page_size], s % page_size)``. The row's logical view
+    is gathered back to the exact [B, cap, Hkv, dh] layout the contiguous
+    path scores — identical einsum extents, identical masks — so paged decode
+    is BITWISE equal to the contiguous cache holding the same logical KV.
+    Stale contents of unallocated/recycled pages sit at masked positions:
+    they soften to exactly 0.0 probability and contribute ±0.0 to the
+    context sum (only finite values are ever written), so pages never need
+    zeroing on alloc/free.
     """
     b = x.shape[0]
     h, hkv, dh = acfg.num_heads, acfg.num_kv_heads, acfg.head_dim
@@ -397,24 +410,39 @@ def attention_decode(
     positions = cl[:, None]
     q, k_new, v_new = _project_qkv(p, acfg, x, positions)
 
-    cap = cache["k"].shape[1]
-    slot = cl % cap
-    rows = jnp.arange(b)
-    ck = cache["k"].at[rows, slot].set(k_new[:, 0])
-    cv = cache["v"].at[rows, slot].set(v_new[:, 0])
+    if page_table is None:
+        cap = cache["k"].shape[1]
+        slot = cl % cap
+        rows = jnp.arange(b)
+        ck = cache["k"].at[rows, slot].set(k_new[:, 0])
+        cv = cache["v"].at[rows, slot].set(v_new[:, 0])
+        ck_rows, cv_rows = ck, cv
+    else:
+        ps = cache["k"].shape[1]
+        cap = page_table.shape[1] * ps
+        slot = cl % cap
+        page = jnp.take_along_axis(page_table, (slot // ps)[:, None], axis=1)[:, 0]
+        off = slot % ps
+        # pad rows (all-zero tables) write duplicate (0, off) coordinates into
+        # the scratch page; the winner is arbitrary and never scored unmasked
+        ck = cache["k"].at[page, off].set(k_new[:, 0])
+        cv = cache["v"].at[page, off].set(v_new[:, 0])
+        tail = cache["k"].shape[2:]
+        ck_rows = ck[page_table].reshape((b, cap) + tail)
+        cv_rows = cv[page_table].reshape((b, cap) + tail)
 
     if use_pallas:
         from repro.kernels import ops as kops
 
         ctx = kops.decode_attention(
-            q, ck, cv, cur_len=cl, window=acfg.window,
+            q, ck_rows, cv_rows, cur_len=cl, window=acfg.window,
             soft_cap=acfg.logit_soft_cap,
         )
     else:
         qg = q.reshape(b, 1, hkv, g, dh)
         # bf16 operands + f32 accumulation (MXU-native; avoids materializing
         # f32 copies of the KV cache — §Perf iteration 2)
-        s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, ck,
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, ck_rows,
                        preferred_element_type=jnp.float32)
         s = s / math.sqrt(dh)
         if acfg.logit_soft_cap is not None:
@@ -434,8 +462,8 @@ def attention_decode(
             valid &= kpos > clb - acfg.window
         s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
         probs = jax.nn.softmax(s, axis=-1)
-        ctx = jnp.einsum("bhgqk,bkhd->bqhgd", probs.astype(cv.dtype), cv,
-                         preferred_element_type=jnp.float32)
+        ctx = jnp.einsum("bhgqk,bkhd->bqhgd", probs.astype(cv_rows.dtype),
+                         cv_rows, preferred_element_type=jnp.float32)
         ctx = ctx.reshape(b, 1, h, dh).astype(x.dtype)
 
     y = ctx.reshape(b, 1, -1) @ p["wo"]

@@ -163,6 +163,32 @@ def zero_state(cfg: ModelConfig, batch: int, cache_len: int) -> Any:
     return tuple(segs)
 
 
+def paged_zero_state(cfg: ModelConfig, num_pages: int, page_size: int) -> Any:
+    """Decode state over the serving engine's PAGED KV pool: the same
+    segments-mirroring pytree as :func:`zero_state`, but each KV leaf is a
+    SHARED plane [reps, num_pages, page_size, Hkv, dh] addressed through
+    per-row page tables (``attention_decode(page_table=...)``) instead of a
+    per-row [B, cap, ...] cache. ``num_pages`` counts the scratch page the
+    pool reserves at physical index 0. KV-cache-only stacks — a recurrent
+    state is per-row by construction and cannot be paged."""
+    dtype = jnp.dtype(cfg.dtype)
+    a = cfg.attention
+    segs = []
+    for unit, reps in cfg.segments:
+        unit_states = []
+        for kind in unit:
+            if kind not in ("attn_mlp", "attn_moe", "local_attn"):
+                raise ValueError(
+                    f"paged KV pool requires KV-cache blocks, got {kind!r}"
+                )
+            shape = (reps, num_pages, page_size, a.num_kv_heads, a.head_dim)
+            unit_states.append(
+                {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+            )
+        segs.append(tuple(unit_states))
+    return tuple(segs)
+
+
 def _zero_block_state(cfg: ModelConfig, kind: str, batch: int, cache_len: int) -> Any:
     dtype = jnp.dtype(cfg.dtype)
     if kind in ("attn_mlp", "attn_moe", "local_attn"):
@@ -192,6 +218,7 @@ def _apply_block(
     state: Any,
     cur_len: Optional[jax.Array],
     residency: Optional[Dict[str, jax.Array]],
+    page_table: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Any, Aux]:
     b, s, d = x.shape
     aux: Aux = {}
@@ -239,7 +266,7 @@ def _apply_block(
         else:
             y, new_state = attn.attention_decode(
                 p["attn"], acfg, h, state, cur_len,
-                use_pallas=rt.sharding.use_pallas,
+                use_pallas=rt.sharding.use_pallas, page_table=page_table,
             )
         x = x + y
         h = apply_norm(cfg.norm, p["ln2"], x)
@@ -451,8 +478,12 @@ def _run_stack(
     state: Optional[Any],
     cur_len: Optional[jax.Array],
     residency: Optional[Any],
+    page_table: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Any, Aux]:
-    """Scan the segment stack. residency: per-MoE-layer {slots, lut} stacked over reps."""
+    """Scan the segment stack. residency: per-MoE-layer {slots, lut} stacked
+    over reps; ``page_table`` [B, pages] switches decode-mode KV blocks to the
+    paged pool layout (shared across layers — every layer's plane is carved
+    identically, so one table addresses them all)."""
     aux_tot: Dict[str, jax.Array] = {}
     new_states: List[Any] = []
     for si, (unit, reps) in enumerate(cfg.segments):
@@ -472,7 +503,8 @@ def _run_stack(
                 st = s_list[pi] if s_list[pi] else None
                 res_i = r if kind == "attn_moe" else None
                 x, ns, aux_b = _apply_block(
-                    kind, p_list[pi], cfg, rt, x, mode, st, cur_len, res_i
+                    kind, p_list[pi], cfg, rt, x, mode, st, cur_len, res_i,
+                    page_table,
                 )
                 new_s.append(ns if ns is not None else {})
                 for k, v in aux_b.items():
@@ -630,11 +662,16 @@ def decode_model(
     cur_len: jax.Array,          # scalar int32: number of tokens already in cache
     rt: Runtime,
     residency: Optional[Any] = None,
+    page_table: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Any, Aux]:
-    """One decode step: returns (logits [B, V], new state, aux incl. miss counts)."""
+    """One decode step: returns (logits [B, V], new state, aux incl. miss
+    counts). ``page_table`` [B, pages]: ``state`` is the serving engine's
+    paged pool (:func:`paged_zero_state`) instead of a per-row batch cache."""
     x = embed_tokens(cfg, params, token[:, None])
     x = rt.constrain(x, P(rt.dp_spec, None, None))
-    h, state, aux = _run_stack(cfg, params, rt, x, "decode", state, cur_len, residency)
+    h, state, aux = _run_stack(
+        cfg, params, rt, x, "decode", state, cur_len, residency, page_table
+    )
     logits = lm_logits(cfg, params, h[:, -1:])[:, 0]
     return logits, state, aux
 
@@ -681,6 +718,7 @@ def decode_window(
     k_steps: int,
     residency: Optional[Any] = None,
     aux_fn: Optional[Any] = None,
+    page_table: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, jax.Array, Any, Aux]:
     """``k_steps`` greedy self-drafted decode steps in ONE traced program.
 
@@ -698,7 +736,8 @@ def decode_window(
     ``aux_fn`` (optional) post-processes each position's aux dict before
     stacking (the engine's on-device demand GEMM). Logits are carried in f32 —
     a lossless upcast, so the caller's host argmax matches the single-token
-    step bit-for-bit.
+    step bit-for-bit. ``page_table`` (scan constant, like residency) runs the
+    window over the paged KV pool.
     """
     b = token.shape[0]
     logits0 = jnp.zeros((b, cfg.vocab_size), jnp.float32)
@@ -706,7 +745,8 @@ def decode_window(
     def body(carry, _):
         tok, st, cl, _ = carry
         logits, st, aux = decode_model(
-            cfg, params, tok, st, cl, rt, residency=residency
+            cfg, params, tok, st, cl, rt, residency=residency,
+            page_table=page_table,
         )
         if aux_fn is not None:
             aux = aux_fn(aux)
@@ -745,8 +785,27 @@ def _kv_window_slots(
     return jnp.arange(b)[:, None], slots                    # [B, 1], [B, K]
 
 
+def _kv_window_slots_paged(
+    cache: jax.Array, page_table: jax.Array, cur_len: jax.Array, k_steps: int
+) -> Tuple[jax.Array, jax.Array]:
+    """Physical (page, offset) index arrays for the ``k_steps`` PAGED cache
+    positions a decode window starting at ``cur_len`` writes.
+    cache [reps, P, page_size, Hkv, dh]; page_table [B, cap // page_size]."""
+    ps = cache.shape[2]
+    b = page_table.shape[0]
+    cap = page_table.shape[1] * ps
+    assert k_steps <= cap, (
+        f"speculative window ({k_steps}) exceeds KV capacity ({cap})"
+    )
+    cl = jnp.broadcast_to(jnp.asarray(cur_len, jnp.int32), (b,))
+    slots = (cl[:, None] + jnp.arange(k_steps, dtype=jnp.int32)[None, :]) % cap
+    pages = jnp.take_along_axis(page_table, slots // ps, axis=1)    # [B, K]
+    return pages, slots % ps                                        # [B, K] x2
+
+
 def snapshot_kv_window(cfg: ModelConfig, state: Any, cur_len: jax.Array,
-                       k_steps: int) -> Any:
+                       k_steps: int,
+                       page_table: Optional[jax.Array] = None) -> Any:
     """Pre-window copies of the KV slots the next ``k_steps`` decode positions
     overwrite — the substrate :func:`rollback_kv_window` restores from.
 
@@ -755,6 +814,10 @@ def snapshot_kv_window(cfg: ModelConfig, state: Any, cur_len: jax.Array,
     gather (K slots per layer), so speculation can truncate exactly: full
     caches get their zeros back, ring caches their previous-lap entries (which
     a rejected window's writes would otherwise destroy).
+
+    ``page_table`` [B, pages]: ``state`` is the paged pool — the same [reps,
+    B, K, Hkv, dh] saved layout, gathered through physical (page, offset)
+    coordinates instead of per-row slots.
     """
     segs = []
     for si, (unit, reps) in enumerate(cfg.segments):
@@ -762,8 +825,13 @@ def snapshot_kv_window(cfg: ModelConfig, state: Any, cur_len: jax.Array,
         for pi, kind in enumerate(unit):
             if kind in _KV_KINDS:
                 def take(c):
-                    rows, slots = _kv_window_slots(c, cur_len, k_steps)
-                    return c[:, rows, slots]
+                    if page_table is None:
+                        rows, slots = _kv_window_slots(c, cur_len, k_steps)
+                        return c[:, rows, slots]
+                    pages, poff = _kv_window_slots_paged(
+                        c, page_table, cur_len, k_steps
+                    )
+                    return c[:, pages, poff]
                 unit_saved.append(jax.tree.map(take, state[si][pi]))
             else:
                 unit_saved.append({})
@@ -778,6 +846,7 @@ def rollback_kv_window(
     cur_len: jax.Array,
     k_steps: int,
     keep: jax.Array,             # scalar or [B]: window positions to keep
+    page_table: Optional[jax.Array] = None,
 ) -> Any:
     """KV truncate after a partially rejected speculative window.
 
@@ -787,6 +856,10 @@ def rollback_kv_window(
     offsets ``< keep`` (the accepted prefix) in place. Truncate-then-redecode
     is bit-identical to never having speculated: the restored state matches
     the one a sequential decode would hold at length ``cur_len + keep``.
+
+    ``page_table`` [B, pages]: paged-pool variant (scatter through physical
+    (page, offset) coordinates; pad rows' duplicate scratch-page writes are
+    harmless — scratch contents are never scored unmasked).
     """
     offs = jnp.arange(k_steps, dtype=jnp.int32)
     segs = []
@@ -796,10 +869,15 @@ def rollback_kv_window(
             st = state[si][pi]
             if kind in _KV_KINDS:
                 def roll(c, s):
-                    rows, slots = _kv_window_slots(c, cur_len, k_steps)
-                    kp = jnp.broadcast_to(
-                        jnp.asarray(keep, jnp.int32), (c.shape[1],)
-                    )
+                    if page_table is None:
+                        rows, slots = _kv_window_slots(c, cur_len, k_steps)
+                        b = c.shape[1]
+                    else:
+                        rows, slots = _kv_window_slots_paged(
+                            c, page_table, cur_len, k_steps
+                        )
+                        b = page_table.shape[0]
+                    kp = jnp.broadcast_to(jnp.asarray(keep, jnp.int32), (b,))
                     mask = offs[None, :] >= kp[:, None]             # [B, K]
                     cur = c[:, rows, slots]
                     blended = jnp.where(mask[None, :, :, None, None], s, cur)

@@ -1,11 +1,19 @@
-"""Serving: continuous batching over the shared compiled hot paths.
+"""Serving: request-level continuous batching over the shared compiled hot
+paths.
 
-``ServingEngine`` drives a fixed decode batch through the SAME fused
+``ServingEngine`` drives the live request set through the SAME fused
 whole-stack step / speculative window programs the rotary engine compiles
-(donated KV, ragged per-row lengths); admission prefills whole groups
-through one shared compiled bucketed program and splices rows into the live
-batch KV. ``Scheduler`` owns admission (deadline feasibility from learned
-prefill/decode rates, power-of-two prefill buckets) and the per-row
+(donated KV, ragged per-row lengths). On KV-cache-only stacks the KV lives
+in a paged pool (``KVPagePool``): each request owns a page table into
+shared per-layer planes, rows join/leave the window between launches, a
+finishing request's pages free immediately and the next queued request
+prefills into them — windows are bucketed to the power-of-two cover of the
+live row count so the compile cache is keyed on geometry, not membership.
+Recurrent stacks (and ``paged=False``) keep the legacy group-tick batch.
+``Scheduler`` owns admission (page-pool pressure with worst-case
+reservations, deadline feasibility from learned prefill/decode rates,
+power-of-two prefill buckets), the per-request lifecycle timestamps behind
+the TTFT / inter-token-latency percentiles, and the per-row
 speculative-length policy. ``Sampler`` is host-side numpy (keeps the
 compiled step deterministic and donation-friendly) and carries the
 speculative ACCEPT rules.
@@ -25,5 +33,6 @@ measured prefill tok/s and accept rates feed the scheduler's admission and
 spec-length EMAs.
 """
 from repro.serving.engine import ServingEngine  # noqa: F401
+from repro.serving.kv_pool import KVPagePool, PagePoolError  # noqa: F401
 from repro.serving.sampler import Sampler, SamplerConfig  # noqa: F401
 from repro.serving.scheduler import Request, Scheduler  # noqa: F401

@@ -1,34 +1,48 @@
-"""Continuous-batching serving engine over the compiled whole-model step.
+"""Request-level continuous batching over a paged KV pool.
 
-A fixed decode batch of ``num_slots`` rows runs one compiled ``decode_model``
-step per tick; rows are claimed/freed by the scheduler as requests arrive and
-finish (per-row ``lengths`` make the ragged batch exact). Each tick's
-admitted requests prefill together through ONE shared compiled bucketed
-program (the scheduler picks the power-of-two bucket, rows pad to the
-power-of-two cover of the group size with per-row ``last_index``, and each
-row's KV splices into the live state) — per-row outputs identical to batch-1
-prefills; recurrent archs keep the exact-length batch-1 path.
+The serving engine runs every decode tick as ONE compiled window launch over
+whatever requests are live *right now*: rows join and leave the window
+BETWEEN launches. A finishing request frees its KV pages immediately
+(`repro.serving.kv_pool.KVPagePool`); the next queued request prefills into
+the freed pages and joins the very next window — no group drain, no idle KV.
+Admission is driven by page-pool pressure (worst-case page reservations at
+admit; lazy physical allocation that therefore never fails mid-flight), not
+batch geometry.
 
-Rotary residency in this path rotates slots BETWEEN steps from the previous
-step's routing telemetry (route_* aux): the compiled step computes resident
-experts via slot LUT; missed experts are dropped in-step, counted, and the
-rotation corrects residency for the following step. The per-layer exact path
-(host-corrected misses) lives in ``repro.core.engine`` — this engine is the
-throughput-oriented compiled half.
+KV lives in SHARED paged planes (`tfm.paged_zero_state`): per layer, one
+[reps, num_pages + 1, page_size, Hkv, dh] plane addressed through per-row
+page tables (physical page 0 is pad/scratch). `attention_decode(page_table=
+...)` gathers each row's logical view back to the contiguous layout before
+scoring, so paged decode is BITWISE equal to a contiguous cache holding the
+same logical KV — the exactness contract (every request's tokens identical to
+a batch-1 run of that request alone) survives the refactor, with rotation /
+prediction telemetry masked per committed row (``accepted=[B]``) exactly as
+the speculative window path does.
 
-Device-residency hot-path details shared with the rotary engine: the compiled
-step IS the engine's fused whole-stack step (``build_fused_decode_step``) —
-KV state donated, demand prediction on-device — the stacked residency pytree
-handed to it is CACHED per segment (rebuilt only for segments whose slots/LUT
-actually rotated — see ``RotaryResidencyManager.stacked_residency``), the
-per-layer LUTs are persistent device arrays patched in place, the routing /
-demand telemetry is pulled with async D2H copies issued before sampling, and
-the between-step rotation is the manager's shared ``rotate_from_telemetry``
-(one batched donated scatter per weight tensor per rotated layer).
+Compile-cache story: programs are keyed on WINDOW GEOMETRY, not live-row
+count — the live rows pack into a power-of-two rows bucket (pad rows carry
+all-zero page tables, write into the scratch page, and are masked everywhere
+with ``accepted = 0``), so at most log2(num_slots)+1 row shapes exist per
+window length K, however requests churn. Speculation, bucketed admission
+prefill, per-row accept/rollback, and deadline handling all carry over; a
+size-1 window IS the plain tick (same program family, same telemetry path).
+
+Recurrent archs (and ``paged=False``) keep the previous group-tick path: a
+fixed contiguous decode batch stepped via ``build_fused_decode_step``, rows
+claimed/freed by the scheduler — recurrent state is per-row by construction
+and cannot live in a shared page plane.
+
+Device-residency hot-path details shared with the rotary engine: the
+compiled window IS the engine's fused whole-stack program
+(``build_fused_window_step``) — KV pool donated, demand prediction on-device
+— the stacked residency pytree is CACHED per segment, per-layer LUTs are
+persistent device arrays patched in place, routing / demand telemetry rides
+async D2H copies issued before the draft pull, and the between-window
+rotation is the manager's ``rotate_window_from_telemetry`` with per-row
+accepted counts masking pad rows and rejected suffixes.
 """
 from __future__ import annotations
 
-import math
 import time
 from typing import Any, Dict, List, Optional
 
@@ -48,8 +62,11 @@ from repro.core.residency import RotaryResidencyManager
 from repro.core.stats import EngineStats
 from repro.models import transformer as tfm
 from repro.models.transformer import Runtime
+from repro.serving.kv_pool import KVPagePool
 from repro.serving.sampler import Sampler, SamplerConfig
 from repro.serving.scheduler import Request, Scheduler
+
+_KV_ONLY_KINDS = ("attn_mlp", "attn_moe", "local_attn")
 
 
 class ServingEngine:
@@ -65,21 +82,30 @@ class ServingEngine:
         eos: Optional[int] = None,
         spec_cap: int = 4,
         bucketed_prefill: bool = True,
+        paged: Optional[bool] = None,
+        kv_page_size: int = 16,
+        kv_pages: Optional[int] = None,
     ):
         """``spec_cap`` bounds per-row speculative decode: when sampling is
-        greedy and the stack is KV-cache-only, ticks run self-drafting windows
-        through ``build_fused_window_step``, sized by the SCHEDULER's learned
-        per-row speculative lengths (``spec_cap=1`` disables speculation).
+        greedy and the stack is KV-cache-only, windows self-draft up to the
+        SCHEDULER's learned per-row speculative lengths (``spec_cap=1``
+        disables speculation).
 
         ``bucketed_prefill`` routes each tick's admitted requests through ONE
         shared compiled prefill program at the scheduler-chosen power-of-two
         bucket (rows padded to the power-of-two cover of the group size,
-        per-row ``last_index`` for the ragged lengths, KV spliced into the
-        live batch state) instead of one batch-1 program launch per request.
-        Per-row outputs are identical
-        to the batch-1 path — the program scans the rows through the very
-        same per-row prefill computation. Recurrent archs need exact-length
-        prefills and keep the batch-1 path regardless."""
+        per-row ``last_index`` for the ragged lengths) instead of one batch-1
+        program launch per request. Per-row outputs are identical to the
+        batch-1 path. Recurrent archs need exact-length prefills and keep the
+        batch-1 path regardless.
+
+        ``paged`` selects the continuous-batching paged KV pool (module
+        docstring); default: on for KV-cache-only stacks, off (group-tick
+        path) for recurrent archs. ``kv_page_size`` is the positions-per-page
+        granularity (clamped to the largest divisor of the per-row cache
+        capacity); ``kv_pages`` overrides the pool size in pages (default
+        ``num_slots`` full rows — the same KV memory the contiguous batch
+        held, now fluid across requests)."""
         self.cfg = cfg
         self.params = params
         self.rt = rt or Runtime(cache_len=1024)
@@ -87,20 +113,26 @@ class ServingEngine:
         self.eos = eos
         self.sampler = Sampler(sampler or SamplerConfig())
         self.stats = EngineStats()
+        kv_only = all(k in _KV_ONLY_KINDS for k in cfg.layer_kinds)
+        if paged is None:
+            paged = kv_only
+        if paged and not kv_only:
+            raise ValueError(
+                "paged KV pool requires a KV-cache-only stack; recurrent "
+                f"archs keep the group-tick path ({cfg.layer_kinds})"
+            )
+        self._paged = paged
         # speculative windows need KV-only state (rollback restores cache
         # slots; a recurrent update is destructive) and greedy drafting (the
         # stochastic accept rule is still a hook — see repro.serving.sampler)
-        kv_only = all(
-            k in ("attn_mlp", "attn_moe", "local_attn") for k in cfg.layer_kinds
-        )
         self._spec_ok = (
             spec_cap > 1 and kv_only and self.sampler.cfg.temperature <= 0.0
         )
+        from repro.models import attention as attn_mod
+
+        cap = attn_mod._cache_capacity(cfg.attention, self.rt.cache_len)
         self._spec_cap_eff = 1
         if self._spec_ok:
-            from repro.models import attention as attn_mod
-
-            cap = attn_mod._cache_capacity(cfg.attention, self.rt.cache_len)
             self._spec_cap_eff = max(1, min(spec_cap, cap))
             self._spec_ok = self._spec_cap_eff > 1
         self.scheduler = Scheduler(
@@ -108,10 +140,30 @@ class ServingEngine:
             max_prompt_len=self.rt.cache_len,
         )
 
-        self.state = tfm.zero_state(cfg, self.batch, self.rt.cache_len)
         self.lengths = np.zeros((self.batch,), np.int32)
         self.next_token = np.zeros((self.batch,), np.int32)
         self.active = np.zeros((self.batch,), bool)
+
+        # --- KV: paged pool (continuous batching) or contiguous batch ----
+        self.pool: Optional[KVPagePool] = None
+        self.state = None                    # contiguous [B, cap, ...] caches
+        self.pool_state = None               # shared paged planes
+        if self._paged:
+            page_size = max(1, min(kv_page_size, cap))
+            while cap % page_size:
+                page_size -= 1               # largest divisor <= kv_page_size
+            row_pages = cap // page_size
+            pages = kv_pages if kv_pages is not None else num_slots * row_pages
+            if pages < row_pages:
+                raise ValueError(
+                    f"kv_pages={pages} cannot hold one full row "
+                    f"({row_pages} pages of {page_size})"
+                )
+            self.pool = KVPagePool(pages, page_size, row_pages)
+            # physical plane index 0 is the scratch page pad rows write into
+            self.pool_state = tfm.paged_zero_state(cfg, pages + 1, page_size)
+        else:
+            self.state = tfm.zero_state(cfg, self.batch, self.rt.cache_len)
 
         # --- residency (MoE archs only) --------------------------------
         self.res_mgr: Optional[RotaryResidencyManager] = None
@@ -131,29 +183,43 @@ class ServingEngine:
                              for n, w in p_l["moe"]["experts"].items()}
                         )
                         routers.append(np.asarray(p_l["moe"]["router"], np.float32))
+            # feasibility prices KV bytes: the pool holds pages-worth of KV,
+            # not num_slots full rows, so report the pool-equivalent batch
+            batch_eff = self.batch
+            if self.pool is not None:
+                batch_eff = max(
+                    1, -(-self.pool.num_pages * self.pool.page_size // cap)
+                )
             self.res_mgr = RotaryResidencyManager(
                 cfg, residency, host_experts,
-                batch=self.batch, cache_len=self.rt.cache_len, stats=self.stats,
+                batch=batch_eff, cache_len=self.rt.cache_len, stats=self.stats,
             )
             self.predictor = DemandPredictor(routers, ema=residency.predictor_ema)
             for li in range(len(host_experts)):
                 self.res_mgr.prepare_layer(li, self.predictor.smoothed[li])
 
         # --- compiled steps ---------------------------------------------
-        # the tick shares the rotary engine's fused whole-stack step: KV state
-        # donated (no per-tick cache copy), per-layer demand GEMM in-graph
+        # ticks share the rotary engine's fused whole-stack programs: KV state
+        # donated (no per-tick cache copy), per-layer demand GEMM in-graph.
+        # Paged mode runs EVERY tick through the window family (a plain tick
+        # is a size-1 window), so the single-token step is only built for the
+        # group-tick path.
         self._routers_next = None
         if self.res_mgr is not None:
             self.res_mgr.donate_buffers = True       # no snapshots span a tick
             self._routers_next = jnp.asarray(self.predictor.next_layer_routers())
-        self._decode = build_fused_decode_step(
-            cfg, self.rt, with_demand=self.res_mgr is not None, donate_state=True,
-            keep_replay_anchor=False,     # no replay path: drop route_x outputs
-        )
+        self._decode = None
+        if not self._paged:
+            self._decode = build_fused_decode_step(
+                cfg, self.rt, with_demand=self.res_mgr is not None,
+                donate_state=True,
+                keep_replay_anchor=False,  # no replay path: drop route_x outputs
+            )
         self._moe_segs = moe_segments(cfg)
         self._prefill_cache: Dict[int, Any] = {}
         self._bucket_prefill_cache: Dict[int, Any] = {}
         self._window_cache: Dict[int, Any] = {}
+        self._paged_splice_cache: Dict[int, Any] = {}
         self._has_recurrence = any(
             k in ("mlstm", "slstm", "rglru") for k in cfg.layer_kinds
         )
@@ -162,7 +228,9 @@ class ServingEngine:
     def _window_fns(self, k: int):
         """Compiled (window step, KV snapshot, KV rollback) for window size
         ``k`` — the rotary engine's speculative triple, minus the replay path
-        (so the window drops the ``route_x`` anchors)."""
+        (so the window drops the ``route_x`` anchors). Paged mode keys its
+        whole compile cache here: (K, rows bucket) geometry, never live-row
+        count."""
         fns = self._window_cache.get(k)
         if fns is None:
             fns = build_window_fns(
@@ -213,8 +281,9 @@ class ServingEngine:
         batch's worth of pad-row prefill work or depress the admission-rate
         EMA), and ONE program launch scans every row through exactly the
         per-row computation ``_prefill_one`` runs — per-row outputs match
-        the batch-1 splice-in path. Rows splice into the live batch KV with
-        the existing ragged machinery (per-row ``last_index`` / ``lengths``).
+        the batch-1 splice-in path. Rows splice into the live KV (contiguous
+        row or allocated pages) with the ragged machinery (per-row
+        ``last_index`` / ``lengths``).
 
         Returns [(request, logits [1, V], row_state)] per admitted request.
         """
@@ -273,100 +342,420 @@ class ServingEngine:
         return out
 
     def _splice_row(self, slot: int, row_state: Any) -> None:
-        """Insert a batch-1 prefill state into batch row ``slot``."""
+        """Insert a batch-1 prefill state into contiguous batch row ``slot``."""
         def splice(dst, src):
             return dst.at[:, slot].set(src[:, 0])
 
         self.state = jax.tree.map(splice, self.state, row_state)
 
+    def _paged_splice_fn(self, n: int):
+        """Compiled ``n``-page join splice (cache keyed on page count —
+        request lengths bucket to at most row_pages shapes)."""
+        fn = self._paged_splice_cache.get(n)
+        if fn is None:
+            ps = self.pool.page_size
+
+            def splice(pool_state, row_state, pg):
+                def one(dst, src):
+                    reps = src.shape[0]
+                    blk = src[:, 0, : n * ps].reshape(
+                        (reps, n, ps) + src.shape[3:]
+                    )
+                    return dst.at[:, pg].set(blk)
+
+                return jax.tree.map(one, pool_state, row_state)
+
+            fn = jax.jit(splice, donate_argnums=(0,))
+            self._paged_splice_cache[n] = fn
+        return fn
+
+    def _splice_row_paged(self, uid: int, row_state: Any) -> None:
+        """Insert a batch-1 prefill state's KV prefix into the pages request
+        ``uid`` owns: ONE donated scatter over every pool plane per join."""
+        pages = self.pool.table(uid)
+        self.pool_state = self._paged_splice_fn(len(pages))(
+            self.pool_state, row_state, jnp.asarray(pages, jnp.int32)
+        )
+        self.stats.device_dispatches += 1
+
+    def _account_pages(self, grew: int) -> None:
+        if grew:
+            self.stats.kv_pages_allocated += grew
+            self.stats.kv_pages_hwm = max(
+                self.stats.kv_pages_hwm, self.pool.pages_in_use
+            )
+
+    def _release_request(self, req: Request) -> None:
+        """A finished row leaves the window: its pages return to the pool NOW
+        and the next queued request prefills into them at the next tick —
+        the continuous-batching lever the group tick lacked."""
+        if self.pool is not None:
+            self.stats.kv_pages_released += self.pool.release(req.uid)
+
+    # ------------------------------------------------------------------
+    def warmup(self, max_prompt_len: int = 16) -> int:
+        """Pre-compile the serving program family for a workload envelope
+        (prompts up to ``max_prompt_len``): admission-prefill buckets x
+        power-of-two group sizes, window K x rows buckets (paged) or the
+        fixed-batch step/window family (group tick), and the paged splice
+        programs for every reachable page count. Call BEFORE submitting
+        traffic — first-request latency then measures serving, not tracing.
+
+        Warmup launches write only throwaway positions (the paged programs
+        write the scratch page; the group-tick programs touch row positions a
+        request's splice fully overwrites) and touch no host bookkeeping or
+        stats. Returns the number of programs compiled."""
+        compiled = 0
+        mp = max(1, min(max_prompt_len, self.rt.cache_len))
+        # admission prefill: every power-of-two bucket the envelope reaches,
+        # at every power-of-two admission group size (recurrent archs prefill
+        # at exact lengths — nothing reusable to pre-compile)
+        if not self._has_recurrence:
+            buckets = sorted({
+                Scheduler.prefill_bucket([l], self.rt.cache_len)
+                for l in range(1, mp + 1)
+            })
+            if self._bucketed_prefill:
+                g = 1
+                while g <= self.batch:
+                    for b in buckets:
+                        if (b, g) not in self._bucket_prefill_cache:
+                            self._prefill_bucketed([
+                                Request(-1 - i, np.zeros((b,), np.int32), 0)
+                                for i in range(g)
+                            ])
+                            compiled += 1
+                    g *= 2
+            else:
+                for b in buckets:
+                    if b not in self._prefill_cache:
+                        self._prefill_one(np.zeros((b,), np.int32))
+                        compiled += 1
+        ks = range(1, self._spec_cap_eff + 1) if self._spec_ok else (1,)
+        residency = None
+        if self.res_mgr is not None:
+            residency = self.res_mgr.stacked_residency()
+        if self._paged:
+            for k in ks:
+                step_fn, snap_fn, roll_fn = self._window_fns(k)
+                rows = 1
+                while rows <= self.batch:
+                    pt = jnp.zeros((rows, self.pool.row_pages), jnp.int32)
+                    tok = jnp.zeros((rows,), jnp.int32)
+                    lens = jnp.zeros((rows,), jnp.int32)
+                    keep = jnp.zeros((rows,), jnp.int32)
+                    saved = None
+                    if self.res_mgr is not None:
+                        saved = snap_fn(self.pool_state, lens, pt)
+                        compiled += 1
+                    out = step_fn(
+                        self.params, self._routers_next, tok,
+                        self.pool_state, lens, residency, pt,
+                    )
+                    self.pool_state = out[2]
+                    compiled += 1
+                    if saved is not None:
+                        self.pool_state = roll_fn(
+                            self.pool_state, saved, lens, keep, pt
+                        )
+                        compiled += 1
+                    rows *= 2
+            for n in sorted({self.pool.pages_for(l) for l in range(1, mp + 1)}):
+                if n not in self._paged_splice_cache:
+                    fn = self._paged_splice_fn(n)
+                    self.pool_state = fn(
+                        self.pool_state,
+                        tfm.zero_state(self.cfg, 1, self.rt.cache_len),
+                        jnp.zeros((n,), jnp.int32),
+                    )
+                    compiled += 1
+            jax.block_until_ready(self.pool_state)
+            return compiled
+        tok = jnp.zeros((self.batch,), jnp.int32)
+        lens = jnp.zeros((self.batch,), jnp.int32)
+        keep = jnp.zeros((self.batch,), jnp.int32)
+        out = self._decode(
+            self.params, self._routers_next, tok, self.state, lens, residency
+        )
+        self.state = out[1]
+        compiled += 1
+        for k in ks:
+            if k == 1:
+                continue
+            step_fn, snap_fn, roll_fn = self._window_fns(k)
+            saved = None
+            if self.res_mgr is not None:
+                saved = snap_fn(self.state, lens)
+                compiled += 1
+            out = step_fn(
+                self.params, self._routers_next, tok, self.state, lens,
+                residency,
+            )
+            self.state = out[2]
+            compiled += 1
+            if saved is not None:
+                self.state = roll_fn(self.state, saved, lens, keep)
+                compiled += 1
+        jax.block_until_ready(self.state)
+        return compiled
+
     # ------------------------------------------------------------------
     def submit(self, prompt: np.ndarray, max_new: int,
                deadline_s: Optional[float] = None) -> Request:
-        return self.scheduler.submit(prompt, max_new, time.perf_counter(), deadline_s)
+        prompt = np.asarray(prompt, np.int32)
+        if self.pool is not None and len(prompt) > self.rt.cache_len:
+            # up-front pool-capacity validation: this request could NEVER be
+            # admitted, so fail loudly instead of queue-rejecting downstream
+            raise ValueError(
+                f"prompt length {len(prompt)} exceeds the per-request KV "
+                f"capacity {self.rt.cache_len} "
+                f"({self.pool.row_pages} pages x {self.pool.page_size} "
+                f"positions at full residency)"
+            )
+        return self.scheduler.submit(
+            prompt, max_new, time.perf_counter(), deadline_s
+        )
 
     def run(self, max_ticks: int = 10_000) -> List[Request]:
         """Drive until all submitted work completes. Returns completed requests."""
         ticks = 0
         t0 = time.perf_counter()
         while not self.scheduler.idle and ticks < max_ticks:
-            now = time.perf_counter()
-            for req, logits, row_state in self._prefill_admitted(
-                self.scheduler.admit(now)
-            ):
-                self._splice_row(req.slot, row_state)
-                self.lengths[req.slot] = len(req.prompt)
-                tok = int(self.sampler(np.asarray(logits))[0])
-                self.next_token[req.slot] = tok
-                self.active[req.slot] = True
-                self.stats.tokens += len(req.prompt)
-                # first sampled token may already finish the request
-                self.scheduler.step_done(req.slot, tok, now, self.eos)
-                if req.done:
-                    self.active[req.slot] = False
-            if not self.scheduler.running:
-                ticks += 1
-                continue
-            # per-row learned speculative lengths: the tick self-drafts as far
-            # as the slowest-adapting ACTIVE row allows (windows are batch-wide
-            # programs; acceptance and KV rollback are per-row)
-            k_tick = 1
-            if self._spec_ok:
-                k_tick = min(
-                    self.scheduler.spec_len(s) for s in self.scheduler.running
-                )
-                k_tick = max(1, min(k_tick, self._spec_cap_eff))
-            if k_tick > 1:
-                self._tick_window(k_tick)
-                ticks += 1
-                continue
-            residency = None
-            if self.res_mgr is not None:
-                residency = self.res_mgr.stacked_residency()
-            logits, self.state, aux = self._decode(
-                self.params,
-                self._routers_next,
-                jnp.asarray(self.next_token),
-                self.state,
-                jnp.asarray(self.lengths),
-                residency,
-            )
-            self.stats.device_dispatches += 1
-            if self.res_mgr is not None:
-                # start D2H copies of the routing/demand telemetry now: they
-                # complete while the host samples, so the between-step rotation
-                # reads below never drain the device queue
-                for k, v in aux.items():
-                    if k.startswith("route_") or k == "demand_next":
-                        v.copy_to_host_async()
-                        self.stats.overlapped_pulls += 1
-            logits_np = np.asarray(logits)
-            self.stats.sync_pulls += 1
-            self.lengths += self.active
-            toks = self.sampler(logits_np)
-            now = time.perf_counter()
-            for slot in list(self.scheduler.running.keys()):
-                self.next_token[slot] = toks[slot]
-                self.scheduler.step_done(slot, toks[slot], now, self.eos)
-                if slot in self.scheduler.free_slots:
-                    self.active[slot] = False
-                if self._spec_ok:
-                    # a plain tick is a size-1 window that accepted its token:
-                    # feedback that lets a fresh row's spec length grow
-                    self.scheduler.observe_accept(slot, 1, 1)
-            self.stats.steps += 1
-            self.stats.tokens += int(self.active.sum())
-            if self.res_mgr is not None:
-                self._rotate_from_aux(aux)
+            self.tick()
             ticks += 1
         self.stats.wall_s += time.perf_counter() - t0
         if self.stats.wall_s > 0 and self.stats.steps:
             self.scheduler.observe_rate(self.stats.steps / self.stats.wall_s)
         return self.scheduler.completed
 
+    def tick(self) -> None:
+        """One serving iteration: request-level joins (admission against pool
+        pressure, prefill into owned pages), then ONE decode launch over the
+        live rows. Public so arrival-driven loops (``launch/serve.py
+        --arrival-rate``, ``benchmarks/serving_load.py``) can interleave
+        submissions with ticks on the wall clock."""
+        now = time.perf_counter()
+        for req, logits, row_state in self._prefill_admitted(
+            self.scheduler.admit(now, pool=self.pool)
+        ):
+            if self.pool is not None:
+                self._account_pages(self.pool.ensure(req.uid, len(req.prompt)))
+                self._splice_row_paged(req.uid, row_state)
+            else:
+                self._splice_row(req.slot, row_state)
+            self.lengths[req.slot] = len(req.prompt)
+            tok = int(self.sampler(np.asarray(logits))[0])
+            self.next_token[req.slot] = tok
+            self.active[req.slot] = True
+            self.stats.tokens += len(req.prompt)
+            # first sampled token may already finish the request
+            self.scheduler.step_done(req.slot, tok, now, self.eos)
+            if req.done:
+                self.active[req.slot] = False
+                self._release_request(req)
+        if not self.scheduler.running:
+            return
+        if self._paged:
+            self._tick_paged()
+            return
+        # group-tick path (recurrent archs / paged=False): per-row learned
+        # speculative lengths — the tick self-drafts as far as the
+        # slowest-adapting ACTIVE row allows (windows are batch-wide
+        # programs; acceptance and KV rollback are per-row)
+        k_tick = 1
+        if self._spec_ok:
+            k_tick = min(
+                self.scheduler.spec_len(s) for s in self.scheduler.running
+            )
+            k_tick = max(1, min(k_tick, self._spec_cap_eff))
+        if k_tick > 1:
+            self._tick_window(k_tick)
+        else:
+            self._tick_single()
+
+    # ------------------------------------------------------------------
+    def _tick_paged(self) -> None:
+        """One continuous-batching window over the paged pool.
+
+        The live rows (whatever requests are running right now) pack into a
+        power-of-two rows bucket and run ONE compiled window launch — pad
+        rows carry all-zero page tables (writes land in the scratch page) and
+        zero lengths/tokens, and are masked out of acceptance, rotation and
+        the predictor EMA via ``accepted = 0``. Window length: 1 when
+        speculation is off (a plain tick is a size-1 window; sampling at
+        temperature > 0 draws from the window's f32 last-position logits,
+        a lossless upcast), else the slowest live row's learned spec length.
+
+        Per-row acceptance mirrors the group-tick window: commit up to (not
+        past) the first residency miss, clamped >= 1 (serving drops missed
+        experts in-step; no replay path); rejected suffixes roll the row's
+        PAGES back via the paged snapshot/rollback and re-draft next window
+        after rotation has corrected residency. Rows that finish mid-window
+        release their pages before the next admission runs.
+        """
+        sch = self.scheduler
+        live = [s for s in sorted(sch.running) if self.active[s]]
+        if not live:
+            return
+        k = 1
+        if self._spec_ok:
+            k = min(sch.spec_len(s) for s in live)
+            k = max(1, min(k, self._spec_cap_eff))
+        # grow each live row's page table to cover the window's writes — the
+        # admission reservation sized this worst-case, so ensure cannot fail
+        for s in live:
+            self._account_pages(
+                self.pool.ensure(sch.running[s].uid, int(self.lengths[s]) + k)
+            )
+        rows = 1 << max(0, len(live) - 1).bit_length()   # pow2 bucket >= live
+        pt = np.zeros((rows, self.pool.row_pages), np.int32)
+        tok = np.zeros((rows,), np.int32)
+        lens = np.zeros((rows,), np.int32)
+        for i, s in enumerate(live):
+            pt[i] = self.pool.table_array(sch.running[s].uid)
+            tok[i] = self.next_token[s]
+            lens[i] = self.lengths[s]
+        step_fn, snap_fn, roll_fn = self._window_fns(k)
+        residency = None
+        if self.res_mgr is not None:
+            residency = self.res_mgr.stacked_residency()
+        pt_j = jnp.asarray(pt)
+        lens_j = jnp.asarray(lens)
+        saved = None
+        if self.res_mgr is not None:
+            # pre-window page contents: misses may reject per-row suffixes.
+            # Dispatched BEFORE the donating window step, so it reads the
+            # pre-window planes.
+            saved = snap_fn(self.pool_state, lens_j, pt_j)
+            self.stats.device_dispatches += 1
+        draft, last_logits, self.pool_state, aux = step_fn(
+            self.params, self._routers_next, jnp.asarray(tok),
+            self.pool_state, lens_j, residency, pt_j,
+        )
+        self.stats.device_dispatches += 1
+        self.stats.windows += 1
+        if k > 1:
+            self.stats.spec_windows += 1
+        if self.res_mgr is not None:
+            for key, v in aux.items():
+                if key.startswith("route_") or key == "demand_next":
+                    v.copy_to_host_async()
+                    self.stats.overlapped_pulls += 1
+        if self.sampler.cfg.temperature <= 0.0:
+            draft_np = np.asarray(draft)       # [K, rows]: THE queue-draining pull
+        else:
+            # sampled serving runs size-1 windows (spec_ok is false): the
+            # host draws from the window's f32 last-position logits
+            draft_np = self.sampler(np.asarray(last_logits))[None, :]
+        self.stats.sync_pulls += 1
+        accepted = np.zeros((rows,), np.int32)
+        accepted[: len(live)] = k
+        miss = None
+        if self.res_mgr is not None:
+            miss = concat_route_telemetry(aux, "miss", self._moe_segs, axis=1)
+            step_row_miss = miss.any(axis=(1, 3))               # [K, rows]
+            any_miss = step_row_miss.any(axis=0)
+            first = np.where(any_miss, step_row_miss.argmax(axis=0), k)
+            accepted[: len(live)] = np.maximum(first[: len(live)], 1)
+        # a finishing row commits only what it can still emit; ``offered`` =
+        # drafts the row could have used (the accept-rate denominator, so
+        # unused tail drafts don't read as rejections)
+        offered: Dict[int, int] = {}
+        for i, s in enumerate(live):
+            req = sch.running[s]
+            budget = req.max_new - len(req.output)
+            offered[s] = min(k, budget)
+            accepted[i] = min(int(accepted[i]), budget)
+        if saved is not None and (accepted[: len(live)] < k).any():
+            self.pool_state = roll_fn(
+                self.pool_state, saved, lens_j, jnp.asarray(accepted), pt_j
+            )
+            self.stats.device_dispatches += 1
+        now = time.perf_counter()
+        fed_total = 0
+        k_committed = 0
+        for i, s in enumerate(live):
+            a = int(accepted[i])
+            self.lengths[s] += a
+            k_committed = max(k_committed, a)
+            req = sch.running[s]
+            fed = 0
+            for j in range(a):
+                t = int(draft_np[j, i])
+                self.next_token[s] = t
+                sch.step_done(s, t, now, self.eos)
+                fed += 1
+                if req.done:
+                    self.active[s] = False
+                    self._release_request(req)
+                    break
+            fed_total += fed
+            sch.observe_accept(s, offered[s], fed)
+            if k > 1:
+                self.stats.drafted_tokens += offered[s]
+                self.stats.accepted_tokens += fed
+        # 'steps' = sequential decode positions the window committed
+        self.stats.steps += k_committed
+        self.stats.tokens += fed_total
+        if self.res_mgr is not None:
+            # pad rows and rejected suffixes are masked out of the hit/miss
+            # accounting and the demand-predictor EMA by accepted=[rows]
+            self.res_mgr.rotate_window_from_telemetry(
+                self.predictor,
+                concat_route_telemetry(aux, "ids", self._moe_segs, axis=1),
+                concat_route_telemetry(aux, "weights", self._moe_segs, axis=1),
+                miss,
+                np.asarray(aux["demand_next"]),
+                accepted=accepted,
+            )
+
+    # ------------------------------------------------------------------
+    def _tick_single(self) -> None:
+        """Group-tick single-token decode (recurrent archs / ``paged=False``):
+        one fused ``decode_model`` step over the fixed contiguous batch."""
+        residency = None
+        if self.res_mgr is not None:
+            residency = self.res_mgr.stacked_residency()
+        logits, self.state, aux = self._decode(
+            self.params,
+            self._routers_next,
+            jnp.asarray(self.next_token),
+            self.state,
+            jnp.asarray(self.lengths),
+            residency,
+        )
+        self.stats.device_dispatches += 1
+        if self.res_mgr is not None:
+            # start D2H copies of the routing/demand telemetry now: they
+            # complete while the host samples, so the between-step rotation
+            # reads below never drain the device queue
+            for k, v in aux.items():
+                if k.startswith("route_") or k == "demand_next":
+                    v.copy_to_host_async()
+                    self.stats.overlapped_pulls += 1
+        logits_np = np.asarray(logits)
+        self.stats.sync_pulls += 1
+        self.lengths += self.active
+        toks = self.sampler(logits_np)
+        now = time.perf_counter()
+        for slot in list(self.scheduler.running.keys()):
+            self.next_token[slot] = toks[slot]
+            self.scheduler.step_done(slot, toks[slot], now, self.eos)
+            if slot in self.scheduler.free_slots:
+                self.active[slot] = False
+            if self._spec_ok:
+                # a plain tick is a size-1 window that accepted its token:
+                # feedback that lets a fresh row's spec length grow
+                self.scheduler.observe_accept(slot, 1, 1)
+        self.stats.steps += 1
+        self.stats.tokens += int(self.active.sum())
+        if self.res_mgr is not None:
+            self._rotate_from_aux(aux)
+
     # ------------------------------------------------------------------
     def _tick_window(self, k: int) -> None:
-        """One speculative serving tick: ``k`` self-drafted positions for the
-        whole batch in ONE compiled program.
+        """One speculative group tick: ``k`` self-drafted positions for the
+        whole contiguous batch in ONE compiled program.
 
         Per-row acceptance: a row commits drafted tokens up to (but not past)
         its first residency miss — clamped to >= 1, since position 0 is
@@ -475,3 +864,35 @@ class ServingEngine:
             concat_route_telemetry(aux, "miss", self._moe_segs),
             np.asarray(aux["demand_next"]),
         )
+
+    # ------------------------------------------------------------------
+    def latency_summary(self) -> Dict[str, float]:
+        """TTFT + inter-token latency percentiles over COMPLETED requests
+        (the load-generator's goodput rows; wall-clock, so only meaningful
+        when requests were submitted at their real arrival times)."""
+        done = self.scheduler.completed
+        ttft = [
+            r.first_token_at - r.submitted_at
+            for r in done if r.first_token_at
+        ]
+        itl: List[float] = []
+        for r in done:
+            ts = r.token_times
+            itl.extend(b - a for a, b in zip(ts, ts[1:]))
+
+        def pct(xs: List[float], q: float) -> float:
+            return float(np.percentile(np.asarray(xs), q)) if xs else 0.0
+
+        return {
+            "completed": len(done),
+            "ttft_p50_ms": round(1e3 * pct(ttft, 50), 3),
+            "ttft_p99_ms": round(1e3 * pct(ttft, 99), 3),
+            "itl_p50_ms": round(1e3 * pct(itl, 50), 3),
+            "itl_p99_ms": round(1e3 * pct(itl, 99), 3),
+        }
+
+    def summary(self) -> Dict[str, float]:
+        """Engine stats + request-latency percentiles in one dict."""
+        out = self.stats.summary()
+        out.update(self.latency_summary())
+        return out

@@ -27,12 +27,19 @@ class Request:
     prompt: np.ndarray                 # [S] int32
     max_new: int
     deadline_s: Optional[float] = None # relative to submission
-    submitted_at: float = 0.0
+    submitted_at: float = 0.0          # arrival
     # filled by the engine
     output: List[int] = field(default_factory=list)
     slot: int = -1
     done: bool = False
     truncated: bool = False
+    reject_reason: str = ""            # why submit refused it (rejected only)
+    # lifecycle timestamps (same clock as submitted_at): admission, first
+    # emitted token (TTFT = first_token_at - submitted_at), every token
+    # commit (inter-token latency percentiles), completion
+    admitted_at: float = 0.0
+    first_token_at: float = 0.0
+    token_times: List[float] = field(default_factory=list)
     finished_at: float = 0.0
 
 
@@ -83,17 +90,49 @@ class Scheduler:
         if too_long or (deadline_s is not None and est > deadline_s):
             req.done = True
             req.truncated = True
+            req.reject_reason = (
+                f"prompt length {len(prompt)} exceeds KV capacity "
+                f"{self.max_prompt_len}" if too_long
+                else f"deadline {deadline_s}s infeasible (est {est:.3f}s)"
+            )
             self.rejected.append(req)
             return req
         heapq.heappush(self.queue, (req.deadline_s or float("inf"), req.uid, req))
         return req
 
-    def admit(self, now: float) -> List[Request]:
-        """Fill free slots from the queue (earliest deadline first)."""
+    def admit(self, now: float, pool=None) -> List[Request]:
+        """Fill free slots from the queue (earliest deadline first).
+
+        With a ``pool`` (`repro.serving.kv_pool.KVPagePool`), admission is
+        driven by PAGE-POOL PRESSURE, not batch geometry: each admit reserves
+        the worst case — pages for the prompt, the full declared output
+        budget (the forecast the EMAs refine only tells us the *expected*
+        finish; the reservation must cover the tail), plus ``spec_cap - 1``
+        speculative headroom (a window writes all K drafted positions before
+        per-row acceptance clamps to the budget) — and stops when the
+        head-of-line request doesn't fit, preserving EDF order. Lazy physical
+        allocation against that reservation can then never fail mid-window,
+        and early finishes hand their unused pages to the next arrival."""
         admitted = []
         while self.free_slots and self.queue:
-            _, _, req = heapq.heappop(self.queue)
+            _, _, req = self.queue[0]
+            if pool is not None:
+                need = pool.pages_for(
+                    len(req.prompt) + req.max_new + self.spec_cap - 1
+                )
+                if not pool.reserve(req.uid, need):
+                    break
+            heapq.heappop(self.queue)
             req.slot = self.free_slots.pop(0)
+            req.admitted_at = now
+            # a never-seen slot joins at the group's learned drafting pace:
+            # slots keep their per-row spec length across requests, but under
+            # continuous batching a cold slot starting at 1 would drag the
+            # whole window (K = min over live rows) back to single-token
+            # decode on every join. Misrouting still halves it within a
+            # window or two.
+            if req.slot not in self._spec_len and self._spec_len:
+                self._spec_len[req.slot] = max(self._spec_len.values())
             self.running[req.slot] = req
             admitted.append(req)
         return admitted
@@ -101,6 +140,9 @@ class Scheduler:
     def step_done(self, slot: int, token: int, now: float, eos: Optional[int] = None) -> None:
         req = self.running[slot]
         req.output.append(int(token))
+        if not req.first_token_at:
+            req.first_token_at = now
+        req.token_times.append(now)
         over_deadline = (
             req.deadline_s is not None and now - req.submitted_at > req.deadline_s
         )

@@ -19,7 +19,7 @@ def test_makefile_targets_match_roadmap():
     roadmap = _read("ROADMAP.md")
     makefile = _read("Makefile")
     for target in ("tier1", "ci", "bench", "bench-decode",
-                   "smoke-int4", "smoke-prefill"):
+                   "smoke-int4", "smoke-prefill", "smoke-serve-cb"):
         assert f"make {target}" in roadmap or f"`{target}`" in roadmap, (
             f"ROADMAP no longer documents the `{target}` make target"
         )
@@ -33,7 +33,8 @@ def test_makefile_targets_match_roadmap():
     assert "tier1_delta.py" in makefile          # the delta print ROADMAP cites
     # ci = dev-deps + tier1 + both smokes, as ROADMAP claims
     ci_line = re.search(r"^ci:\s*(.+?)(?:\s*##|$)", makefile, re.M).group(1)
-    for dep in ("dev-deps", "tier1", "smoke-int4", "smoke-prefill"):
+    for dep in ("dev-deps", "tier1", "smoke-int4", "smoke-prefill",
+                "smoke-serve-cb"):
         assert dep in ci_line, (dep, ci_line)
     # bench-decode rows ROADMAP/benchmarks README describe are actually passed
     assert "--spec-k" in makefile and "--quantization" in makefile
@@ -47,14 +48,17 @@ def test_architecture_doc_exists_and_is_linked():
     # the load-bearing sections: residency model, dispatch table, exactness,
     # quantized link, serving tick
     for needle in ("SlotStore", "SlotLUT", "DemandPredictor", "dispatch",
-                   "int4", "replay", "ServingEngine", "prefill"):
+                   "int4", "replay", "ServingEngine", "prefill",
+                   "KVPagePool", "page table", "continuous batching"):
         assert needle.lower() in arch.lower(), needle
 
 
 def test_benchmarks_readme_documents_the_json():
     readme = _read("benchmarks/README.md")
     for needle in ("BENCH_decode.json", "mb_per_token", "0.30",
-                   "ttft", "prefill_fused", "tier1"):
+                   "ttft", "prefill_fused", "tier1",
+                   "BENCH_serving.json", "serving_load", "goodput",
+                   "ttft_p99", "arrival"):
         assert needle.lower() in readme.lower(), needle
 
 
@@ -64,7 +68,8 @@ def test_examples_show_current_flags():
     serve = _read("examples/serve_rotary.py")
     for needle in ("prefill_chunk", "spec_k", "int4"):
         assert needle in quick, needle
-    for needle in ("spec_cap", "bucketed_prefill", "int4"):
+    for needle in ("spec_cap", "bucketed_prefill", "int4",
+                   "kv_page_size", "ttft_p50_ms"):
         assert needle in serve, needle
     # and those kwargs really exist on the engines (drift in the other
     # direction: examples naming parameters that were renamed away)
@@ -77,7 +82,8 @@ def test_examples_show_current_flags():
     for kw in ("prefill_chunk", "spec_k", "host_routing", "fused_decode"):
         assert kw in rotary_params, kw
     serving_params = inspect.signature(ServingEngine.__init__).parameters
-    for kw in ("spec_cap", "bucketed_prefill", "residency"):
+    for kw in ("spec_cap", "bucketed_prefill", "residency",
+               "paged", "kv_pages", "kv_page_size"):
         assert kw in serving_params, kw
 
 
@@ -86,8 +92,10 @@ def test_serve_cli_flags_exist():
     wiring without running a model)."""
     serve_src = _read("src/repro/launch/serve.py")
     for flag in ("--prefill-chunk", "--spec-k", "--spec-cap",
-                 "--quantization", "--quant-group"):
+                 "--quantization", "--quant-group",
+                 "--arrival-rate", "--kv-pages", "--kv-page-size"):
         assert flag in serve_src, flag
     makefile = _read("Makefile")
     assert "--prefill-chunk" in makefile          # smoke-prefill really uses it
     assert "--quantization int4" in makefile      # smoke-int4 really uses it
+    assert "--arrival-rate" in makefile           # smoke-serve-cb really uses it
