@@ -3,7 +3,7 @@ PYTHON ?= python
 SHELL := /bin/bash
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: dev-deps tier1 ci bench bench-decode smoke-int4 smoke-prefill smoke-serve-cb
+.PHONY: dev-deps tier1 ci bench bench-decode smoke-int4 smoke-prefill smoke-serve-cb smoke-prefetch
 
 dev-deps:          ## install test-only deps (hypothesis property coverage)
 	$(PYTHON) -m pip install -r requirements-dev.txt
@@ -33,7 +33,15 @@ smoke-serve-cb:    ## continuous-batching serve smoke: seeded Poisson arrivals
 	  --batch-slots 4 --prompt-len 10 --max-new 6 --cache-len 64 \
 	  --kv-page-size 8
 
-ci: dev-deps tier1 smoke-int4 smoke-prefill smoke-serve-cb ## "green" in one command: dev deps + tier-1 + int4, prefill & CB-serve smokes
+smoke-prefetch:    ## asynchronous-prefetch smoke: slot-starved rotary serve
+                   ## with double-buffered shadow generations + speculative
+                   ## windows (uploads hide under window compute, misses
+                   ## re-launch the compiled step)
+	$(PYTHON) -m repro.launch.serve --arch qwen2-moe-a2.7b --engine rotary \
+	  --residency rotary --slots 6 --prefetch --batch 2 --requests 2 \
+	  --prompt-len 8 --max-new 6 --spec-k 2 --cache-len 64
+
+ci: dev-deps tier1 smoke-int4 smoke-prefill smoke-serve-cb smoke-prefetch ## "green" in one command: dev deps + tier-1 + int4, prefill, CB-serve & prefetch smokes
 
 bench:             ## all paper-table / kernel / hot-path benchmarks (emits BENCH_decode.json)
 	$(PYTHON) -m benchmarks.run

@@ -378,6 +378,7 @@ class RotaryEngine:
         fused_decode: Optional[bool] = None,
         spec_k: int = 1,
         prefill_chunk: Optional[int] = None,
+        prefetch: bool = False,
     ):
         """Decode-path switches (see module docstring for the mechanisms):
 
@@ -422,7 +423,19 @@ class RotaryEngine:
           residency mode and slot format), and greedy continuations match
           the legacy full-sequence walk token for token — misses
           host-correct in the walk and suffix-replay per chunk in the fused
-          path, exactly like decode.
+          path, exactly like decode;
+        * ``prefetch=True`` — asynchronous predictive expert prefetch over
+          double-buffered slot planes: while a launch computes, the predicted
+          next transition's uploads land in a shadow generation
+          (``RotaryResidencyManager.begin_prefetch``), and the boundary
+          becomes confirm/correct/flip instead of synchronous scatters; the
+          policy additionally steers up to ``rescfg.prefetch_margin`` cold
+          slots toward predicted-hot off-window experts, which is what cuts
+          the miss (and replay) rate. Residency may EVOLVE differently from
+          the synchronous baseline, but greedy tokens stay bit-identical —
+          the exactness machinery (host correction + replay) is unchanged.
+          Requires the fused hot path; ``prefetch=False`` (the default)
+          keeps the synchronous rotation path as the exactness baseline.
         """
         assert cfg.has_moe, "RotaryEngine requires an MoE architecture"
         self.cfg = cfg
@@ -532,6 +545,35 @@ class RotaryEngine:
                 f"spec_k={spec_k} exceeds the KV cache capacity ({cap})"
             )
         self.spec_k = spec_k
+        # asynchronous predictive prefetch rides the fused hot path: it hides
+        # shadow uploads under an IN-FLIGHT compiled launch, which the
+        # synchronous baselines don't have. Fail loudly on unsupported combos
+        # rather than silently running synchronous.
+        self.prefetch = bool(prefetch)
+        if self.prefetch:
+            if host_routing:
+                raise ValueError(
+                    "prefetch=True is incompatible with host_routing=True: the "
+                    "host-routing baseline blocks on per-layer logits pulls, so "
+                    "there is no in-flight launch to hide shadow uploads under"
+                )
+            if not self._fused_decode:
+                raise ValueError(
+                    "prefetch=True requires the fused whole-stack hot path "
+                    "(no LRU / recurrent stacks, fused_decode not disabled): "
+                    "synchronous per-layer walks rotate mid-step, so there is "
+                    "nothing to overlap"
+                )
+            if rescfg.mode != "full":
+                # full residency never rotates: accept the flag (benchmarks
+                # sweep it uniformly) but skip the shadow plane. margin=0:
+                # predictive slot steering measured NEGATIVE on this workload
+                # (routing is too close to uniform for the one-step-stale
+                # signal — both the EMA and the raw pre-gating sample raised
+                # the steps-with-a-miss count), so the perf mechanism is the
+                # miss-relaunch, which needs no prediction at all; steering
+                # stays available through the manager for richer routers
+                self.manager.enable_prefetch(margin=0)
         self._jits: Dict[Tuple, Callable] = {}
         self._head_jit = jax.jit(self._lm_head_impl)
         self._cost_cache: Dict[str, Tuple[float, float]] = {}
@@ -1008,6 +1050,12 @@ class RotaryEngine:
         for k in self._pull_keys:
             aux[k].copy_to_host_async()
         self.stats.overlapped_pulls += len(self._pull_keys)
+        if self.prefetch:
+            # the launch above is still in flight: plan the predicted next
+            # transition and ship its uploads into the SHADOW generation now,
+            # so this host work + the scatters overlap the device compute the
+            # blocking pull below waits on
+            self.manager.begin_prefetch(self.predictor, self.clock)
         logits = np.asarray(logits_dev)        # THE one queue-draining pull
         self.stats.sync_pulls += 1
         ids = concat_route_telemetry(aux, "ids", self._moe_segs)      # [L, T, k]
@@ -1030,7 +1078,20 @@ class RotaryEngine:
         # charges the suffix itself)
         self._account_step_prefix(ids, miss, start_li, cur_len)
         if start_li < len(self.layers):
-            logits = self._replay_fused(aux, start_moe, start_li, cur_len)
+            # miss-relaunch (prefetch mode): upload the known-missed experts —
+            # no prediction involved — let the incremental planes/LUT absorb
+            # the patch off the shared generation counter, and re-run the ONE
+            # compiled step. Far cheaper than the per-layer replay walk with
+            # its sync pull per MoE layer; falls back to the replay when the
+            # residency cannot cover the routed set.
+            redo = (
+                self._relaunch_fused(tok, cur_len, ids, start_moe, start_li)
+                if self.prefetch else None
+            )
+            if redo is not None:
+                logits, ids, weights, miss, demand_next = redo
+            else:
+                logits = self._replay_fused(aux, start_moe, start_li, cur_len)
         # between-step rotation: the pre-gating GEMM already ran on device;
         # host work is the EMA fold, the ring transition, and ONE batched
         # (donated) scatter per weight tensor per rotated layer
@@ -1047,15 +1108,19 @@ class RotaryEngine:
         stop_li: int,
         cur_len: int,
         tokens: int = 1,
+        start_li: int = 0,
     ) -> None:
-        """record_routing + modeled clock for layers ``< stop_li`` of one
-        authoritative step (ids/miss [L, T, k]), in seed order — shared by the
-        fused decode step, every position of a speculative window, and each
-        fused prefill chunk (``tokens`` = positions the launch processed)."""
+        """record_routing + modeled clock for layers ``[start_li, stop_li)`` of
+        one authoritative step (ids/miss [L, T, k]), in seed order — shared by
+        the fused decode step, every position of a speculative window, each
+        fused prefill chunk (``tokens`` = positions the launch processed), and
+        the miss-relaunch suffix."""
         xshape = (self.batch, tokens, self.cfg.d_model)
         for li, (kind, _) in enumerate(self.layers):
             if li >= stop_li:
                 break
+            if li < start_li:
+                continue
             moe_li = self.moe_index[li]
             if moe_li is not None:
                 self.manager.record_routing(moe_li, ids[moe_li], miss[moe_li])
@@ -1117,6 +1182,10 @@ class RotaryEngine:
             aux[key].copy_to_host_async()
         draft_dev.copy_to_host_async()
         self.stats.overlapped_pulls += len(self._pull_keys) + 1
+        if self.prefetch:
+            # whole window still in flight: shadow-upload the predicted next
+            # transition under it (committed at the boundary rotation below)
+            self.manager.begin_prefetch(self.predictor, self.clock)
         logits = np.asarray(logits_dev)        # THE one queue-draining pull
         self.stats.sync_pulls += 1
         draft = np.asarray(draft_dev)                               # [K, B]
@@ -1139,6 +1208,18 @@ class RotaryEngine:
         if missed.size and self.rescfg.host_compute_misses:
             j_star = int(missed[0])
             accept = min(accept, j_star)
+        if j_star is not None and self.prefetch:
+            # miss-relaunch for the whole window: cover every layer's routed
+            # union across the K positions and re-run the ONE compiled window
+            # program (it rewrites all K KV slots itself, so no rollback is
+            # needed on success). Positions before the first miss recompute
+            # bit-identically; the rest become the exact corrected chain —
+            # the whole window commits instead of rejecting the suffix.
+            redo = self._relaunch_window(step_fn, tok, cur_len0, k, ids)
+            if redo is not None:
+                draft, logits, ids, weights, miss, demand_next = redo
+                accept = int(greedy_accept(draft, draft).min())
+                j_star = None
         self.stats.drafted_tokens += k
         self.stats.accepted_tokens += accept
         # --- stats + modeled clock for fully-accepted positions ---------
@@ -1181,6 +1262,138 @@ class RotaryEngine:
             clock=self.clock, record=False,
         )
         return draft[: committed - 1], logits, committed
+
+    def _relaunch_fused(
+        self,
+        tok: np.ndarray,
+        cur_len: int,
+        ids0: np.ndarray,
+        start_moe: int,
+        start_li: int,
+    ) -> Optional[Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray, np.ndarray]]:
+        """Miss correction by RE-LAUNCH (prefetch mode): the telemetry names
+        the missed experts exactly, so upload them, patch the persistent
+        planes/LUT incrementally, and re-run the whole compiled step at the
+        SAME ``cur_len`` — the relaunch overwrites every KV slot the optimistic
+        pass wrote, and a miss-free launch is bit-identical to the
+        host-corrected replay (the full-vs-starved exactness invariant), so
+        greedy tokens cannot move. One compiled launch + one pull replaces the
+        per-layer suffix walk and its sync pull per MoE layer.
+
+        Corrected routing can route to NEW experts (the suffix recomputes from
+        corrected hiddens); one more covering relaunch is allowed before
+        falling back. Returns ``(logits, ids, weights, miss, demand_next)``
+        from the authoritative miss-free pass, or None when residency cannot
+        cover a layer's routed set (caller replays) or misses persist."""
+        ids_cur = ids0
+        for _ in range(2):
+            # feasibility first, BEFORE paying any upload: ensure_resident can
+            # cover layer l iff |unique routed| <= num_slots (every occupant is
+            # either routed — it stays — or evictable), so a doomed relaunch
+            # costs nothing and falls straight back to the replay
+            routed_all = [
+                np.unique(ids_cur[m]) for m in range(start_moe, self.num_moe_layers)
+            ]
+            if any(
+                r.size > self.manager.policies[start_moe + i].lut.num_slots
+                for i, r in enumerate(routed_all)
+            ):
+                return None
+            moved = 0
+            for i, moe_li in enumerate(range(start_moe, self.num_moe_layers)):
+                routed = routed_all[i]
+                loads = self.manager.ensure_resident(moe_li, routed, routed)
+                if loads is None:
+                    return None
+                moved += len(loads) * self.manager.stores[moe_li].bytes_per_expert
+            if moved:
+                self.clock.blocking(moved)
+            residency = self.manager.stacked_residency()
+            logits_dev, self._dstate, aux = self._fused_step(
+                self._decode_params, self._routers_next, jnp.asarray(tok),
+                self._dstate, jnp.int32(cur_len), residency,
+            )
+            self.stats.device_dispatches += 1
+            self.stats.relaunched_steps += 1
+            for k in self._pull_keys:
+                aux[k].copy_to_host_async()
+            logits = np.asarray(logits_dev)
+            self.stats.sync_pulls += 1
+            ids = concat_route_telemetry(aux, "ids", self._moe_segs)
+            weights = concat_route_telemetry(aux, "weights", self._moe_segs)
+            miss = concat_route_telemetry(aux, "miss", self._moe_segs)
+            demand_next = np.asarray(aux["demand_next"])
+            if not miss.any():
+                # suffix accounting: the caller charged layers < start_li from
+                # the original launch; the relaunch is authoritative for the
+                # rest (exactly the slice _replay_fused would have recorded)
+                self._account_step_prefix(
+                    ids, miss, len(self.layers), cur_len, start_li=start_li
+                )
+                return logits, ids, weights, miss, demand_next
+            ids_cur = ids
+        return None
+
+    def _relaunch_window(
+        self,
+        step_fn: Callable,
+        tok: np.ndarray,
+        cur_len0: int,
+        k: int,
+        ids0: np.ndarray,
+    ) -> Optional[Tuple[np.ndarray, ...]]:
+        """Window-sized miss relaunch: cover each layer's routed-expert union
+        across all K positions (None when it exceeds the slot count — spec
+        windows can route wider than a single step) and re-run the compiled
+        window program. On success every position is exact, so the caller
+        commits all K tokens; on persistent misses the caller falls back to
+        the classic rollback + suffix replay against the ORIGINAL telemetry,
+        which stays valid because positions before the first miss recompute
+        bit-identically and the pre-window KV snapshot is untouched."""
+        ids_cur = ids0                                     # [K, L, T, kk]
+        for _ in range(2):
+            # same zero-cost feasibility gate as the single-step relaunch —
+            # crucial here, because a window's routed union across K positions
+            # regularly exceeds the slot count and the fallback replay would
+            # otherwise be paid ON TOP of wasted uploads and a wasted launch
+            routed_all = [
+                np.unique(ids_cur[:, m]) for m in range(self.num_moe_layers)
+            ]
+            if any(
+                r.size > self.manager.policies[m].lut.num_slots
+                for m, r in enumerate(routed_all)
+            ):
+                return None
+            moved = 0
+            for moe_li in range(self.num_moe_layers):
+                routed = routed_all[moe_li]
+                loads = self.manager.ensure_resident(moe_li, routed, routed)
+                if loads is None:
+                    return None
+                moved += len(loads) * self.manager.stores[moe_li].bytes_per_expert
+            if moved:
+                self.clock.blocking(moved)
+            residency = self.manager.stacked_residency()
+            draft_dev, logits_dev, self._dstate, aux = step_fn(
+                self._decode_params, self._routers_next, jnp.asarray(tok),
+                self._dstate, jnp.int32(cur_len0), residency,
+            )
+            self.stats.device_dispatches += 1
+            self.stats.relaunched_steps += 1
+            for key in self._pull_keys:
+                aux[key].copy_to_host_async()
+            draft_dev.copy_to_host_async()
+            logits = np.asarray(logits_dev)
+            self.stats.sync_pulls += 1
+            draft = np.asarray(draft_dev)
+            ids = concat_route_telemetry(aux, "ids", self._moe_segs, axis=1)
+            weights = concat_route_telemetry(aux, "weights", self._moe_segs, axis=1)
+            miss = concat_route_telemetry(aux, "miss", self._moe_segs, axis=1)
+            demand_next = np.asarray(aux["demand_next"])
+            if not miss.any():
+                return draft, logits, ids, weights, miss, demand_next
+            ids_cur = ids
+        return None
 
     def _replay_fused(
         self,
@@ -1343,7 +1556,8 @@ class RotaryEngine:
         ids: np.ndarray,                 # [L, T, k] the chunk's routing
         weights: np.ndarray,             # [L, T, k]
         miss: np.ndarray,                # [L, T, k]
-        h_rows: List[jax.Array],         # per MoE layer: [T, D] device hiddens
+        h_all: Optional[jax.Array] = None,   # [L, T, D] stacked MoE hiddens
+        demand_dev: Optional[jax.Array] = None,  # pre-dispatched GEMM result
     ) -> None:
         """ONE coalesced rotation window at a chunk boundary, shared by the
         walk and fused chunked prefill paths: the pre-gating demand GEMM runs
@@ -1351,12 +1565,15 @@ class RotaryEngine:
         the same compiled program in both paths, so residency evolves
         bit-identically), then ``rotate_from_telemetry`` folds the EMA, runs
         each layer's ring transition once, and batches the uploads to one
-        scatter per weight tensor per rotated layer. Hit/miss accounting
-        already happened (walk: ``resolve``; fused: prefix accounting +
-        replay), hence ``record=False``."""
-        h_all = jnp.stack(h_rows)                                   # [L, T, D]
-        demand = np.asarray(self._demand_all_jit(h_all, self._routers_next))
-        self.stats.device_dispatches += 1
+        scatter per weight tensor per rotated layer. The fused path dispatches
+        the GEMM under the still-in-flight chunk launch and passes the result
+        as ``demand_dev``. Hit/miss accounting already happened (walk:
+        ``resolve``; fused: prefix accounting + replay), hence
+        ``record=False``."""
+        if demand_dev is None:
+            demand_dev = self._demand_all_jit(h_all, self._routers_next)
+            self.stats.device_dispatches += 1
+        demand = np.asarray(demand_dev)
         self.manager.rotate_from_telemetry(
             self.predictor, ids, weights, miss, demand,
             clock=self.clock, record=False,
@@ -1380,7 +1597,7 @@ class RotaryEngine:
                 np.stack([t[0] for t in self._chunk_telem]),
                 np.stack([t[1] for t in self._chunk_telem]),
                 np.stack([t[2] for t in self._chunk_telem]),
-                [t[3].reshape(-1, d) for t in self._chunk_telem],
+                jnp.stack([t[3].reshape(-1, d) for t in self._chunk_telem]),
             )
             cur += c
         self._chunk_telem = []      # don't pin the last chunk's device hiddens
@@ -1421,6 +1638,18 @@ class RotaryEngine:
             for k in self._prefill_pull_keys:
                 aux[k].copy_to_host_async()
             self.stats.overlapped_pulls += len(self._prefill_pull_keys)
+            # dispatch the boundary demand GEMM behind the in-flight launch:
+            # its input is the step's own route_h output, so it is computed
+            # by the time the blocking telemetry pulls below drain the queue
+            # (only usable when no replay patches the hiddens — see below)
+            segs = [aux[f"route_h/seg{si}"] for si in self._moe_segs]
+            h_fast = segs[0] if len(segs) == 1 else jnp.concatenate(segs)
+            demand_dev = self._demand_all_jit(h_fast, self._routers_next)
+            self.stats.device_dispatches += 1
+            if self.prefetch:
+                # chunk launch in flight: shadow-upload the predicted next
+                # chunk-boundary transition under it
+                self.manager.begin_prefetch(self.predictor, self.clock)
             if last:
                 logits = np.asarray(logits_dev)  # THE queue-draining pull
             self.stats.sync_pulls += 1
@@ -1429,10 +1658,6 @@ class RotaryEngine:
             ids = concat_route_telemetry(aux, "ids", self._moe_segs)  # [L,T,k]
             weights = concat_route_telemetry(aux, "weights", self._moe_segs)
             miss = concat_route_telemetry(aux, "miss", self._moe_segs)
-            h_rows = [
-                aux[f"route_h/seg{si}"][r]
-                for si, r in self._moe_pos
-            ]                                   # per MoE layer: [T, D] device
             missed = np.flatnonzero(miss.reshape(miss.shape[0], -1).any(axis=1))
             start_moe = (
                 int(missed[0])
@@ -1451,13 +1676,25 @@ class RotaryEngine:
                 ids, weights, miss = (
                     np.array(a) for a in (ids, weights, miss)
                 )
+                h_rows = [
+                    aux[f"route_h/seg{si}"][r]
+                    for si, r in self._moe_pos
+                ]                               # per MoE layer: [T, D] device
                 replay_logits = self._replay_prefill_chunk(
                     aux, start_moe, start_li, cur, c,
                     ids, weights, miss, h_rows, with_head=last,
                 )
                 if last:
                     logits = replay_logits
-            self._rotate_chunk_boundary(ids, weights, miss, h_rows)
+                # the replay patched the hiddens — the optimistic GEMM read
+                # stale rows; re-run it over the authoritative stack
+                self._rotate_chunk_boundary(
+                    ids, weights, miss, h_all=jnp.stack(h_rows)
+                )
+            else:
+                self._rotate_chunk_boundary(
+                    ids, weights, miss, demand_dev=demand_dev
+                )
             cur += c
         return logits
 

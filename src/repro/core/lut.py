@@ -7,24 +7,31 @@ bookkeeping. Host-side numpy; the device copy is refreshed on rotation.
 """
 from __future__ import annotations
 
-from typing import Iterable, List, Tuple
+from typing import Dict, Iterable, List, Tuple
 
 import numpy as np
 
 
 class SlotLUT:
+    # device copies that sync incrementally off this table: the per-layer [E]
+    # int32 array and the per-segment stacked LUT plane (one row per rep)
+    _consumers: Tuple[str, ...] = ("device", "stacked")
+
     def __init__(self, num_experts: int, num_slots: int):
         self.num_experts = num_experts
         self.num_slots = num_slots
         self.miss = num_slots                       # sentinel: trailing zero slot
         self.e2s = np.full((num_experts,), self.miss, np.int32)
         self.s2e = np.full((num_slots,), -1, np.int32)
-        # incremental-device-sync bookkeeping: ``version`` counts mutations,
-        # ``_dirty`` holds expert ids whose e2s entry changed since the last
-        # ``take_dirty`` (the residency manager patches only those entries of
-        # its persistent device LUT copy instead of re-uploading [E] per layer)
+        # incremental-device-sync bookkeeping: ``version`` counts mutations;
+        # per-CONSUMER dirty sets hold expert ids whose e2s entry changed since
+        # that consumer's last ``take_dirty``. Two device copies track this LUT
+        # independently — the per-layer [E] array (consumer "device") and the
+        # per-segment stacked LUT plane (consumer "stacked") — so each patches
+        # only the entries IT hasn't absorbed yet instead of re-uploading [E]
+        # per layer per step.
         self.version = 0
-        self._dirty: set = set()
+        self._dirty: Dict[str, set] = {}
 
     # -- queries ----------------------------------------------------------
     def slot_of(self, expert: int) -> int:
@@ -48,17 +55,35 @@ class SlotLUT:
         """Device-uploadable [E] int32 (missing experts -> miss sentinel)."""
         return self.e2s.copy()
 
-    def dirty_count(self) -> int:
-        """Number of e2s entries mutated since the last ``take_dirty`` —
-        lets the residency manager pick patch vs full re-upload without
-        consuming (or materializing) the dirty set."""
-        return len(self._dirty)
+    def dirty_count(self, consumer: str = "device") -> int:
+        """Number of e2s entries mutated since ``consumer``'s last
+        ``take_dirty`` — lets the residency manager pick patch vs full
+        re-upload without consuming (or materializing) the dirty set."""
+        return len(self._dirty.get(consumer, ()))
 
-    def take_dirty(self) -> np.ndarray:
-        """Expert ids mutated since the previous call (sorted, then cleared)."""
-        idx = np.fromiter(sorted(self._dirty), np.int64, len(self._dirty))
-        self._dirty.clear()
+    def take_dirty(self, consumer: str = "device") -> np.ndarray:
+        """Expert ids mutated since ``consumer``'s previous call (sorted, then
+        cleared for that consumer only — the other device copies keep their
+        own backlog)."""
+        d = self._dirty.get(consumer)
+        if not d:
+            return np.empty((0,), np.int64)
+        idx = np.fromiter(sorted(d), np.int64, len(d))
+        d.clear()
         return idx
+
+    def _mark_dirty(self, expert: int) -> None:
+        for consumer in self._consumers:
+            self._dirty.setdefault(consumer, set()).add(int(expert))
+
+    def clone(self) -> "SlotLUT":
+        """Mutation-isolated copy for transition SIMULATION (the prefetch
+        predictor runs the next boundary's placement on a clone so speculative
+        planning never touches the authoritative table or its dirty sets)."""
+        c = SlotLUT(self.num_experts, self.num_slots)
+        c.e2s = self.e2s.copy()
+        c.s2e = self.s2e.copy()
+        return c
 
     # -- updates ----------------------------------------------------------
     def assign(self, expert: int, slot: int) -> int:
@@ -69,13 +94,13 @@ class SlotLUT:
         evicted = int(self.s2e[slot])
         if evicted >= 0:
             self.e2s[evicted] = self.miss
-            self._dirty.add(evicted)
+            self._mark_dirty(evicted)
         prev_slot = int(self.e2s[expert])
         if prev_slot != self.miss:
             self.s2e[prev_slot] = -1
         self.e2s[expert] = slot
         self.s2e[slot] = expert
-        self._dirty.add(int(expert))
+        self._mark_dirty(expert)
         self.version += 1
         return evicted
 
@@ -84,7 +109,7 @@ class SlotLUT:
         if slot != self.miss:
             self.s2e[slot] = -1
             self.e2s[expert] = self.miss
-            self._dirty.add(int(expert))
+            self._mark_dirty(expert)
             self.version += 1
 
     def check_consistent(self) -> None:

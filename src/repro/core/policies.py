@@ -11,6 +11,7 @@ Interface per MoE layer:
 """
 from __future__ import annotations
 
+import copy
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
@@ -27,12 +28,30 @@ class ResidencyPolicy:
     # need routed ids on host before the next layer runs, forcing the engine's
     # per-layer sync walk instead of the device-resident hot path)
     needs_sync_resolve = False
+    # >0 enables predictive steering (see RotaryPolicy): up to this many of the
+    # coldest resident slots may be retargeted to hot off-window experts per
+    # transition. Set ONLY via the residency manager's prefetch mode — the
+    # synchronous baseline keeps 0, so its transitions are byte-identical to
+    # every prior PR.
+    prefetch_margin = 0
 
     def __init__(self, num_experts: int, num_slots: int):
         self.lut = SlotLUT(num_experts, num_slots)
 
-    def prepare(self, demand: np.ndarray) -> List[Load]:
+    def prepare(
+        self, demand: np.ndarray, steer_demand: Optional[np.ndarray] = None
+    ) -> List[Load]:
         return []
+
+    def simulate_prepare(
+        self, demand: np.ndarray, steer_demand: Optional[np.ndarray] = None
+    ) -> List[Load]:
+        """The loads the NEXT ``prepare(demand)`` would issue, WITHOUT mutating
+        this policy — the prefetch planner runs it on clones so speculative
+        uploads never advance the authoritative LUT/ring state."""
+        sim = copy.copy(self)
+        sim.lut = self.lut.clone()
+        return sim.prepare(demand, steer_demand)
 
     def on_miss(self, expert: int) -> Optional[Load]:
         return None
@@ -82,7 +101,9 @@ class StaticPolicy(ResidencyPolicy):
         super().__init__(num_experts, num_slots)
         self._initialized = False
 
-    def prepare(self, demand: np.ndarray) -> List[Load]:
+    def prepare(
+        self, demand: np.ndarray, steer_demand: Optional[np.ndarray] = None
+    ) -> List[Load]:
         if self._initialized:
             return []
         self._initialized = True
@@ -148,10 +169,59 @@ class RotaryPolicy(ResidencyPolicy):
         self.host_compute_misses = host_compute_misses
         self.last_decision = None
 
-    def prepare(self, demand: np.ndarray) -> List[Load]:
+    def prepare(
+        self, demand: np.ndarray, steer_demand: Optional[np.ndarray] = None
+    ) -> List[Load]:
         decision = self.ring.rotate(demand)
         self.last_decision = decision
-        return self._place([int(e) for e in decision.window], decision.window)
+        # the ring rotates on the long-horizon EMA; steering retargets slots
+        # on the FRESH pre-gating sample when one is supplied — replay is
+        # billed per step-with-a-miss, so the steering signal must predict the
+        # next step's routing, not the running average
+        target = self._steer_window(
+            decision.window, demand if steer_demand is None else steer_demand
+        )
+        return self._place([int(e) for e in target], target)
+
+    def _steer_window(self, window: np.ndarray, demand: np.ndarray) -> np.ndarray:
+        """Predictive steering (prefetch mode only): swap up to
+        ``prefetch_margin`` of the window's coldest experts for strictly-hotter
+        experts the bounded ring rotation cannot reach. This is what converts
+        predicted misses into hits — the ring keeps hot experts CONTIGUOUS
+        only in aggregate, and a miss costs a host GEMM + suffix replay, far
+        more than the int4 upload a swap costs. Deterministic: stable argsort,
+        expert-id tie-breaks. With margin 0 (the synchronous baseline) the ring
+        window passes through untouched."""
+        margin = self.prefetch_margin
+        if margin <= 0:
+            return window
+        members = [int(e) for e in window]
+        member_set = set(members)
+        order = np.argsort(-demand, kind="stable")
+        hot = [
+            int(e) for e in order
+            if int(e) not in member_set and demand[int(e)] > 0.0
+        ][:margin]
+        if not hot:
+            return window
+        cold = sorted(members, key=lambda e: (demand[e], e))
+        swapped = list(members)
+        ci = 0
+        for h in hot:                        # hottest missing vs coldest held
+            victim = cold[ci]
+            if demand[victim] >= demand[h]:
+                break
+            swapped[swapped.index(victim)] = h
+            ci += 1
+        return np.asarray(swapped, np.int32)
+
+    def simulate_prepare(
+        self, demand: np.ndarray, steer_demand: Optional[np.ndarray] = None
+    ) -> List[Load]:
+        sim = copy.copy(self)
+        sim.ring = self.ring.clone()
+        sim.lut = self.lut.clone()
+        return sim.prepare(demand, steer_demand)
 
     def on_miss(self, expert: int) -> Optional[Load]:
         if self.host_compute_misses:

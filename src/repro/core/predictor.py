@@ -49,6 +49,10 @@ class DemandPredictor:
         self.ema = ema
         e = self.routers[0].shape[1]
         self.smoothed = [np.full((e,), 1.0 / e, np.float64) for _ in self.routers]
+        # freshest raw pre-gating sample per layer (pre-EMA): the prefetch
+        # planner steers on this — one step stale, but far closer to the next
+        # step's actual routing than the heavily damped EMA
+        self.last_sample = [np.full((e,), 1.0 / e, np.float64) for _ in self.routers]
 
     @property
     def num_layers(self) -> int:
@@ -66,6 +70,7 @@ class DemandPredictor:
         step's on-device router GEMM) and return the smoothed demand — the
         host half of ``predict`` when the GEMM already ran on device."""
         demand = np.asarray(demand, np.float64)
+        self.last_sample[layer] = demand.copy()
         self.smoothed[layer] = self.ema * self.smoothed[layer] + (1 - self.ema) * demand
         return self.smoothed[layer].copy()
 
@@ -110,6 +115,18 @@ class DemandPredictor:
         if s > 0:
             actual /= s
             self.smoothed[layer] = 0.5 * self.smoothed[layer] + 0.5 * actual
+
+    def forecast(self, layer: int) -> np.ndarray:
+        """Current smoothed demand [E] — the prefetch planner's forecast of
+        the NEXT boundary's transition input. The boundary will fold a fresh
+        on-device sample into this EMA before transitioning; speculation uses
+        the pre-fold value, which is why a prefetched slot can mispredict and
+        why the commit pass re-checks every one."""
+        return self.smoothed[layer].copy()
+
+    def steer_signal(self, layer: int) -> np.ndarray:
+        """Freshest raw pre-gating sample [E] for predictive slot steering."""
+        return self.last_sample[layer].copy()
 
     def top_experts(self, layer: int, k: int) -> np.ndarray:
         return np.argsort(-self.smoothed[layer])[:k].astype(np.int32)

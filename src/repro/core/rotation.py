@@ -126,6 +126,26 @@ class RotaryRing:
             self._rering()
         return RotationDecision(delta=best_delta, reverse_jump=False, window=self.window)
 
+    def clone(self) -> "RotaryRing":
+        """Mutation-isolated copy for transition SIMULATION: prefetch runs the
+        next boundary's rotate() on a clone so the speculative plan never
+        advances the authoritative ring state (pos/step/EMA/snapshots)."""
+        c = RotaryRing(
+            self.num_experts,
+            self.num_slots,
+            max_stride=self.max_stride,
+            reverse_threshold=self.reverse_threshold,
+            snapshot_every=self.snapshot_every,
+            max_snapshots=self.snapshots.maxlen or 32,
+            rering_every=self.rering_every,
+        )
+        c.ring = self.ring.copy()
+        c.pos = self.pos
+        c.step = self.step
+        c.ema = self.ema.copy()
+        c.snapshots = deque(self.snapshots, maxlen=self.snapshots.maxlen)
+        return c
+
     @staticmethod
     def _ring_delta(src: int, dst: int, num_experts: int) -> int:
         """Minimal signed rotation taking ``src`` to ``dst`` on the ring.

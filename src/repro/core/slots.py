@@ -69,6 +69,34 @@ def scatter_set(buf: jax.Array, idx: jax.Array, vals: jax.Array) -> jax.Array:
     return buf.at[idx].set(vals)
 
 
+@functools.partial(jax.jit, donate_argnums=(0,))
+def scatter_copy_rows_donated(dst: jax.Array, src: jax.Array, idx: jax.Array) -> jax.Array:
+    """Device-to-device row copy ``dst[idx] = src[idx]`` — the shadow
+    generation's catch-up path (slots whose live content the shadow merely
+    lags on never touch the host link)."""
+    return dst.at[idx].set(src[idx])
+
+
+@jax.jit
+def scatter_copy_rows(dst: jax.Array, src: jax.Array, idx: jax.Array) -> jax.Array:
+    return dst.at[idx].set(src[idx])
+
+
+# pytree-fused upload: every weight-tensor component (and its quantization
+# scale/min planes) of one rotation lands in a SINGLE compiled scatter, so a
+# slot upload costs one program launch regardless of tensor count — the
+# miss-relaunch path uploads on the decode critical path, where per-dispatch
+# overhead was the dominant cost of the correction
+@functools.partial(jax.jit, donate_argnums=(0,))
+def scatter_set_tree_donated(planes, idx, vals):
+    return jax.tree_util.tree_map(lambda p, v: p.at[idx].set(v), planes, vals)
+
+
+@jax.jit
+def scatter_set_tree(planes, idx, vals):
+    return jax.tree_util.tree_map(lambda p, v: p.at[idx].set(v), planes, vals)
+
+
 def dequantize_int8(q: jax.Array, scale: jax.Array, dtype: Any) -> jax.Array:
     return (q.astype(jnp.float32) * scale).astype(dtype)
 
@@ -90,12 +118,19 @@ class SlotStore:
         self.quantization = quantization
         self.group_size = group_size
         self.version = 0                # bumped per write (stacked-cache key)
-        self.dispatches = 0             # scatter launches issued (batched: one
-                                        # per weight tensor component per rotation)
+        self.dispatches = 0             # scatter launches issued (fused: ONE
+                                        # per write_batch, covering every
+                                        # tensor component and quant plane)
         self.bytes_uploaded = 0         # cumulative host->device upload bytes
         self.dequant_runs = 0           # lazy host dequantizations executed
         self._pytree_cache: Optional[Params] = None
         self._pytree_version = -1
+        # shadow generation (double-buffered slot planes): predictive prefetch
+        # writes land here while a compiled launch reads the live buffers; the
+        # boundary corrects mispredictions and flips. None until the owning
+        # manager first calls ensure_shadow (sync-rotation engines never pay
+        # the second plane).
+        self._shadow: Optional[Dict[str, Params]] = None
         if quantization == "int8":
             store_dtype = jnp.int8
         elif quantization == "int4":
@@ -158,6 +193,7 @@ class SlotStore:
         stacked_weights: Dict[str, np.ndarray],   # name -> [N, ...] host array
         *,
         donate: bool = False,
+        shadow: bool = False,
     ) -> int:
         """Upload N experts in ONE stacked scatter per weight tensor component.
 
@@ -166,42 +202,111 @@ class SlotStore:
         scale/min planes) instead of N per tensor; ``donate`` additionally
         donates the old device buffer to the scatter so steady-state rotation
         allocates nothing (safe only when no snapshot of the buffer is live —
-        the fused decode path rotates strictly after replay).
-        Returns bytes moved host->device.
+        the fused decode path rotates strictly after replay). ``shadow``
+        targets the SHADOW generation instead: an in-flight launch (and the
+        replay that may follow it) keeps reading the untouched live buffers,
+        which is what lets predictive prefetch ship these bytes during
+        compute. Returns bytes moved host->device.
         """
         if not len(slots):
             return 0
         for slot in slots:
             assert 0 <= slot < self.num_slots, f"slot {slot} out of range"
-        scatter = scatter_set_donated if donate else scatter_set
+        if shadow:
+            self.ensure_shadow()
+            buffers, scales, mins = (
+                self._shadow["buffers"], self._shadow["scales"], self._shadow["mins"]
+            )
+        else:
+            buffers, scales, mins = self.buffers, self.scales, self.mins
+            self.version += 1
+        scatter = scatter_set_tree_donated if donate else scatter_set_tree
         idx = jnp.asarray(np.asarray(slots, np.int32))
-        self.version += 1
+        # quantize host-side per tensor, then land EVERY plane (packed bytes +
+        # scale/min) of every tensor in ONE fused scatter dispatch
+        target: Dict[str, Params] = {"q": {}, "s": {}, "m": {}}
+        vals: Dict[str, Params] = {"q": {}, "s": {}, "m": {}}
         moved = 0
         for name, w in stacked_weights.items():
             w = np.asarray(w)
             if self.quantization == "int8":
                 q, scale = quantize_int8_batch(w.astype(np.float32))
-                self.buffers[name] = scatter(self.buffers[name], idx, jnp.asarray(q))
-                self.scales[name] = scatter(self.scales[name], idx, jnp.asarray(scale))
-                self.dispatches += 2
+                target["q"][name], vals["q"][name] = buffers[name], q
+                target["s"][name], vals["s"][name] = scales[name], scale
                 moved += q.nbytes + scale.nbytes
             elif self.quantization == "int4":
                 q, scale, mn = quantize_int4_batch(
                     w.astype(np.float32), self.group_size
                 )
-                self.buffers[name] = scatter(self.buffers[name], idx, jnp.asarray(q))
-                self.scales[name] = scatter(self.scales[name], idx, jnp.asarray(scale))
-                self.mins[name] = scatter(self.mins[name], idx, jnp.asarray(mn))
-                self.dispatches += 3
+                target["q"][name], vals["q"][name] = buffers[name], q
+                target["s"][name], vals["s"][name] = scales[name], scale
+                target["m"][name], vals["m"][name] = mins[name], mn
                 moved += q.nbytes + scale.nbytes + mn.nbytes
             else:
-                self.buffers[name] = scatter(
-                    self.buffers[name], idx, jnp.asarray(w, self.dtype)
-                )
-                self.dispatches += 1
+                target["q"][name] = buffers[name]
+                vals["q"][name] = np.asarray(w, self.dtype)
                 moved += int(np.prod(w.shape)) * self.dtype.itemsize
+        out = scatter(target, idx, vals)
+        self.dispatches += 1
+        for name, b in out["q"].items():
+            buffers[name] = b
+        for name, s in out["s"].items():
+            scales[name] = s
+        for name, m in out["m"].items():
+            mins[name] = m
         self.bytes_uploaded += moved
         return moved
+
+    # -- double-buffered generations (predictive prefetch) -----------------
+    @property
+    def has_shadow(self) -> bool:
+        return self._shadow is not None
+
+    def ensure_shadow(self) -> None:
+        """Materialize the shadow generation (a one-time copy of the live
+        buffers, so the first flip's untouched slots are already correct)."""
+        if self._shadow is not None:
+            return
+        self._shadow = {
+            "buffers": {n: b.copy() for n, b in self.buffers.items()},
+            "scales": {n: s.copy() for n, s in self.scales.items()},
+            "mins": {n: m.copy() for n, m in self.mins.items()},
+        }
+        self.dispatches += len(self.buffers) + len(self.scales) + len(self.mins)
+
+    def sync_shadow_slots(self, slots: Sequence[int], *, donate: bool = False) -> int:
+        """Device-to-device catch-up: copy ``slots`` rows live -> shadow (slots
+        the shadow merely lags on — no host-link traffic). Returns dispatches."""
+        if not len(slots):
+            return 0
+        self.ensure_shadow()
+        copy_rows = scatter_copy_rows_donated if donate else scatter_copy_rows
+        # pad to a FIXED index length: duplicate rows copy the same value
+        # twice (idempotent), and one compiled scatter then serves every flip
+        # instead of shape-specializing per distinct stale-slot count
+        idx_np = np.asarray(slots, np.int32)
+        if idx_np.size < self.num_slots:
+            idx_np = np.pad(idx_np, (0, self.num_slots - idx_np.size), mode="edge")
+        idx = jnp.asarray(idx_np)
+        n = 0
+        for live_tree, key in (
+            (self.buffers, "buffers"), (self.scales, "scales"), (self.mins, "mins")
+        ):
+            sh = self._shadow[key]
+            for name, src in live_tree.items():
+                sh[name] = copy_rows(sh[name], src, idx)
+                n += 1
+        self.dispatches += n
+        return n
+
+    def flip(self) -> None:
+        """Generation flip: the corrected shadow becomes live (what the next
+        launch gathers from); the previous live becomes the new, stale shadow."""
+        assert self._shadow is not None, "flip() before any shadow write"
+        self.buffers, self._shadow["buffers"] = self._shadow["buffers"], self.buffers
+        self.scales, self._shadow["scales"] = self._shadow["scales"], self.scales
+        self.mins, self._shadow["mins"] = self._shadow["mins"], self.mins
+        self.version += 1
 
     def as_pytree(self) -> Params:
         """The {w_*} pytree ``moe_gathered`` consumes (dequantized view when

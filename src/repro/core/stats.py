@@ -42,8 +42,9 @@ class EngineStats:
                                     # issues (fused decode: 1 per miss-free token)
     lut_patch_dispatches: int = 0   # incremental LUT patch launches (subset of
                                     # device_dispatches; <=1 per layer per step)
-    upload_dispatches: int = 0      # slot-upload scatter launches (batched: one
-                                    # per weight tensor per rotation, not per expert)
+    upload_dispatches: int = 0      # slot-upload scatter launches (fused: ONE
+                                    # per rotation covering all weight tensors
+                                    # and quant planes, not per expert/tensor)
     bytes_uploaded: int = 0         # real host->device slot-upload bytes (packed
                                     # bytes under int8/int4 — the link traffic the
                                     # quantized store shrinks ~2x / ~4x)
@@ -71,6 +72,22 @@ class EngineStats:
     kv_pages_released: int = 0      # KV pool pages returned on request finish
     kv_pages_hwm: int = 0           # peak pages simultaneously in use (the
                                     # pool-pressure admission high-water mark)
+    prefetch_launched: int = 0      # speculative expert uploads shipped into the
+                                    # shadow generation during window compute
+    prefetch_hits: int = 0          # prefetched uploads the authoritative
+                                    # transition confirmed (flip reuses the
+                                    # bytes; no boundary upload needed)
+    prefetch_wasted_bytes: int = 0  # shadow bytes the transition disagreed with
+                                    # (mispredicted slots, overwritten before
+                                    # the flip by the correction pass)
+    overlap_ms: float = 0.0         # wall time the prefetch work spent hidden
+                                    # under in-flight window compute (dispatch
+                                    # happens between the launch and its
+                                    # queue-draining pull)
+    relaunched_steps: int = 0       # compiled re-launches that replaced the
+                                    # per-layer suffix replay (prefetch mode:
+                                    # missed experts uploaded, planes patched
+                                    # incrementally, step re-run miss-free)
 
     def layer(self, idx: int) -> LayerStats:
         return self.layers.setdefault(idx, LayerStats())
@@ -138,4 +155,9 @@ class EngineStats:
             "kv_pages_allocated": self.kv_pages_allocated,
             "kv_pages_released": self.kv_pages_released,
             "kv_pages_hwm": self.kv_pages_hwm,
+            "prefetch_launched": self.prefetch_launched,
+            "prefetch_hits": self.prefetch_hits,
+            "prefetch_wasted_bytes": self.prefetch_wasted_bytes,
+            "overlap_ms": round(self.overlap_ms, 3),
+            "relaunched_steps": self.relaunched_steps,
         }

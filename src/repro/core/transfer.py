@@ -53,6 +53,13 @@ class TransferClock:
         self.stall_s = 0.0
         self.host_s = 0.0
 
+    @property
+    def hidden_s(self) -> float:
+        """Modeled DMA seconds hidden behind device compute: total transfer
+        time minus the portion compute had to wait on. Predictive prefetch
+        exists to push this toward ``transfer_s`` (stall_s -> 0)."""
+        return max(0.0, self.transfer_s - self.stall_s)
+
     def prefetch(self, nbytes: int) -> None:
         if nbytes <= 0:
             return

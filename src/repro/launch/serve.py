@@ -69,6 +69,16 @@ def main() -> None:
                          "batch-slots full rows)")
     ap.add_argument("--kv-page-size", type=int, default=16,
                     help="KV pool page granularity in cache positions")
+    ap.add_argument("--prefetch", action=argparse.BooleanOptionalAction,
+                    default=False,
+                    help="asynchronous predictive expert prefetch: shadow-"
+                         "generation uploads hidden under in-flight launches, "
+                         "boundary = confirm/correct/flip (rotary engine: "
+                         "plus predictive slot steering; batch engine: "
+                         "overlap only). --no-prefetch (the default) keeps "
+                         "the synchronous rotation path as the exactness "
+                         "baseline. Loud error on unsupported combos "
+                         "(host routing, LRU, non-paged batch engine)")
     ap.add_argument("--warmup", action="store_true",
                     help="pre-compile the batch-engine program family before "
                          "serving (first-request latency then measures "
@@ -109,6 +119,7 @@ def main() -> None:
             rt=rt, batch=b, host_routing=args.host_routing,
             spec_k=max(1, args.spec_k),
             prefill_chunk=args.prefill_chunk or None,
+            prefetch=args.prefetch,
         )
         # serve requests in decode groups of --batch (device-resident hot path
         # amortizes the per-step host interaction over all rows of the group)
@@ -129,6 +140,7 @@ def main() -> None:
         spec_cap=max(1, args.spec_cap),
         kv_page_size=args.kv_page_size,
         kv_pages=args.kv_pages or None,
+        prefetch=args.prefetch,
     )
     if args.warmup:
         n = eng.warmup(max_prompt_len=args.prompt_len)

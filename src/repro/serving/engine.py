@@ -85,6 +85,7 @@ class ServingEngine:
         paged: Optional[bool] = None,
         kv_page_size: int = 16,
         kv_pages: Optional[int] = None,
+        prefetch: bool = False,
     ):
         """``spec_cap`` bounds per-row speculative decode: when sampling is
         greedy and the stack is KV-cache-only, windows self-draft up to the
@@ -105,7 +106,19 @@ class ServingEngine:
         granularity (clamped to the largest divisor of the per-row cache
         capacity); ``kv_pages`` overrides the pool size in pages (default
         ``num_slots`` full rows — the same KV memory the contiguous batch
-        held, now fluid across requests)."""
+        held, now fluid across requests).
+
+        ``prefetch`` enables asynchronous predictive expert prefetch on the
+        paged tick: while a window launch is in flight, the predicted next
+        boundary's uploads land in the slot stores' SHADOW generation and the
+        tick boundary becomes confirm/correct/flip
+        (``RotaryResidencyManager.begin_prefetch`` / ``_commit_layer``).
+        Unlike the rotary engine, serving enables it with steering margin 0:
+        the paged tick has no replay path (a missed position commits with
+        the expert dropped), so transitions must stay byte-identical to the
+        synchronous baseline for outputs to stay byte-identical — only the
+        overlap is bought. Requires the paged pool and a rotating residency
+        manager."""
         self.cfg = cfg
         self.params = params
         self.rt = rt or Runtime(cache_len=1024)
@@ -208,6 +221,31 @@ class ServingEngine:
         if self.res_mgr is not None:
             self.res_mgr.donate_buffers = True       # no snapshots span a tick
             self._routers_next = jnp.asarray(self.predictor.next_layer_routers())
+        self.prefetch = bool(prefetch)
+        if self.prefetch:
+            if self.res_mgr is None:
+                raise ValueError(
+                    "prefetch=True needs a rotating residency manager: pass a "
+                    "non-full ResidencyConfig on an MoE architecture (full "
+                    "residency never rotates, so there is nothing to prefetch)"
+                )
+            if not self._paged:
+                raise ValueError(
+                    "prefetch=True rides the paged continuous-batching tick; "
+                    "the group-tick path rotates synchronously"
+                )
+            if any(
+                getattr(p, "needs_sync_resolve", False)
+                for p in self.res_mgr.policies
+            ):
+                raise ValueError(
+                    "prefetch=True is incompatible with reactive (LRU-style) "
+                    "policies: their mid-step blocking loads leave no "
+                    "boundary to flip at"
+                )
+            # margin 0: see the docstring — serving has no replay path, so
+            # the transition SEQUENCE must match the synchronous baseline
+            self.res_mgr.enable_prefetch(margin=0)
         self._decode = None
         if not self._paged:
             self._decode = build_fused_decode_step(
@@ -641,6 +679,12 @@ class ServingEngine:
                 if key.startswith("route_") or key == "demand_next":
                     v.copy_to_host_async()
                     self.stats.overlapped_pulls += 1
+            if self.prefetch:
+                # window still in flight: ship the predicted boundary's
+                # uploads into the shadow generation under it (request joins
+                # between ticks just drift the shadow — the next commit's
+                # catch-up copies reconcile it)
+                self.res_mgr.begin_prefetch(self.predictor)
         if self.sampler.cfg.temperature <= 0.0:
             draft_np = np.asarray(draft)       # [K, rows]: THE queue-draining pull
         else:

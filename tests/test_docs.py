@@ -19,7 +19,8 @@ def test_makefile_targets_match_roadmap():
     roadmap = _read("ROADMAP.md")
     makefile = _read("Makefile")
     for target in ("tier1", "ci", "bench", "bench-decode",
-                   "smoke-int4", "smoke-prefill", "smoke-serve-cb"):
+                   "smoke-int4", "smoke-prefill", "smoke-serve-cb",
+                   "smoke-prefetch"):
         assert f"make {target}" in roadmap or f"`{target}`" in roadmap, (
             f"ROADMAP no longer documents the `{target}` make target"
         )
@@ -34,7 +35,7 @@ def test_makefile_targets_match_roadmap():
     # ci = dev-deps + tier1 + both smokes, as ROADMAP claims
     ci_line = re.search(r"^ci:\s*(.+?)(?:\s*##|$)", makefile, re.M).group(1)
     for dep in ("dev-deps", "tier1", "smoke-int4", "smoke-prefill",
-                "smoke-serve-cb"):
+                "smoke-serve-cb", "smoke-prefetch"):
         assert dep in ci_line, (dep, ci_line)
     # bench-decode rows ROADMAP/benchmarks README describe are actually passed
     assert "--spec-k" in makefile and "--quantization" in makefile
@@ -49,7 +50,9 @@ def test_architecture_doc_exists_and_is_linked():
     # quantized link, serving tick
     for needle in ("SlotStore", "SlotLUT", "DemandPredictor", "dispatch",
                    "int4", "replay", "ServingEngine", "prefill",
-                   "KVPagePool", "page table", "continuous batching"):
+                   "KVPagePool", "page table", "continuous batching",
+                   "shadow generation", "prefetch", "flip", "relaunch",
+                   "write-through"):
         assert needle.lower() in arch.lower(), needle
 
 
@@ -58,7 +61,9 @@ def test_benchmarks_readme_documents_the_json():
     for needle in ("BENCH_decode.json", "mb_per_token", "0.30",
                    "ttft", "prefill_fused", "tier1",
                    "BENCH_serving.json", "serving_load", "goodput",
-                   "ttft_p99", "arrival"):
+                   "ttft_p99", "arrival",
+                   "fused_rotary_pf", "overlap_ms", "relaunched_steps",
+                   "prefetch_wasted_bytes", "1.5x"):
         assert needle.lower() in readme.lower(), needle
 
 
@@ -79,11 +84,12 @@ def test_examples_show_current_flags():
     from repro.serving import ServingEngine
 
     rotary_params = inspect.signature(RotaryEngine.__init__).parameters
-    for kw in ("prefill_chunk", "spec_k", "host_routing", "fused_decode"):
+    for kw in ("prefill_chunk", "spec_k", "host_routing", "fused_decode",
+               "prefetch"):
         assert kw in rotary_params, kw
     serving_params = inspect.signature(ServingEngine.__init__).parameters
     for kw in ("spec_cap", "bucketed_prefill", "residency",
-               "paged", "kv_pages", "kv_page_size"):
+               "paged", "kv_pages", "kv_page_size", "prefetch"):
         assert kw in serving_params, kw
 
 
@@ -93,9 +99,11 @@ def test_serve_cli_flags_exist():
     serve_src = _read("src/repro/launch/serve.py")
     for flag in ("--prefill-chunk", "--spec-k", "--spec-cap",
                  "--quantization", "--quant-group",
-                 "--arrival-rate", "--kv-pages", "--kv-page-size"):
+                 "--arrival-rate", "--kv-pages", "--kv-page-size",
+                 "--prefetch"):
         assert flag in serve_src, flag
     makefile = _read("Makefile")
     assert "--prefill-chunk" in makefile          # smoke-prefill really uses it
     assert "--quantization int4" in makefile      # smoke-int4 really uses it
     assert "--arrival-rate" in makefile           # smoke-serve-cb really uses it
+    assert "--prefetch" in makefile               # smoke-prefetch really uses it

@@ -108,8 +108,8 @@ def test_lut_patch_at_most_one_dispatch_per_layer_per_step(rng):
 
 
 def test_write_batch_matches_per_expert_writes():
-    """One stacked scatter per tensor == N per-expert writes, bit-for-bit,
-    with one dispatch per tensor instead of N (and donation-safe)."""
+    """One fused scatter per write_batch == N per-expert writes, bit-for-bit,
+    with ONE dispatch for every tensor together (and donation-safe)."""
     rng = np.random.default_rng(0)
     shapes = {"w_up": (8, 12), "w_down": (12, 8)}
     experts = [rng.standard_normal((8, 12)).astype(np.float32) for _ in range(3)]
@@ -126,7 +126,7 @@ def test_write_batch_matches_per_expert_writes():
         {"w_up": np.stack(experts), "w_down": np.stack(downs)},
         donate=True,
     )
-    assert bat.dispatches - d0 == 2          # one scatter per weight tensor
+    assert bat.dispatches - d0 == 1          # one fused scatter for ALL tensors
     assert moved == 3 * (8 * 12 + 12 * 8) * 4
     for name in shapes:
         np.testing.assert_array_equal(
@@ -367,3 +367,46 @@ def test_serving_feeds_prefill_rate(rng):
     eng.submit(rng.integers(0, cfg.vocab_size, 6), max_new=2)
     eng.run()
     assert eng.scheduler.est_prefill_tok_s != after_cold
+
+
+# ===========================================================================
+# asynchronous predictive prefetch: double-buffered slot generations
+# ===========================================================================
+def test_prefetch_flag_validation():
+    """prefetch=True fails LOUDLY on combos with no in-flight launch to hide
+    shadow uploads under, instead of silently running synchronous."""
+    cfg, params = _f32_setup()
+    with pytest.raises(ValueError, match="host_routing"):
+        _engine(cfg, params, "rotary", 5, host_routing=True, prefetch=True)
+    with pytest.raises(ValueError, match="fused"):
+        _engine(cfg, params, "rotary", 5, fused_decode=False, prefetch=True)
+    with pytest.raises(ValueError, match="fused"):
+        _engine(cfg, params, "lru", 5, prefetch=True)
+
+
+@pytest.mark.parametrize("mode,slots,quant,spec_k", [
+    ("rotary", 5, None, 1),        # slot-starved: misses relaunch/replay
+    ("rotary", 8, None, 1),        # prefetch-covered (all experts fit)
+    ("full", 0, None, 1),          # never rotates: flag accepted, no shadow
+    ("rotary", 5, None, 4),        # speculative windows over the flip
+    ("rotary", 5, "int4", 1),      # grouped-int4 shadow planes
+])
+def test_prefetch_tokens_identical_to_sync(rng, mode, slots, quant, spec_k):
+    """Greedy tokens with prefetch=True (shadow-generation uploads during the
+    in-flight launch, boundary confirm/correct/flip, compiled-step miss
+    relaunch) are bit-identical to the synchronous-rotation engine — across
+    residency regimes, spec windows, and the int4 slot format."""
+    cfg, params = _f32_setup()
+    res = lambda: ResidencyConfig(mode=mode, num_slots=slots,
+                                  quantization=quant)
+    prompt = rng.integers(0, 200, (2, 7)).astype(np.int32)
+    kw = dict(rt=Runtime(cache_len=64), batch=2, spec_k=spec_k)
+    ref = RotaryEngine(cfg, params, res(), **kw).generate(prompt, 9)
+    eng = RotaryEngine(cfg, params, res(), prefetch=True, **kw)
+    np.testing.assert_array_equal(ref, eng.generate(prompt, 9))
+    if mode == "rotary" and slots == 5:
+        s = eng.stats
+        assert s.misses > 0                     # starvation actually happened
+        # every miss was resolved by the compiled-step relaunch or, past the
+        # iteration cap, the replay fallback — never silently dropped
+        assert s.relaunched_steps + s.replayed_steps > 0

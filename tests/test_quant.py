@@ -96,13 +96,14 @@ def test_int4_store_bytes_le_030x_f16():
 
 
 def test_int4_write_batch_one_scatter_per_plane(rng):
-    """A rotation moving N experts costs one scatter per tensor PLANE
-    (packed + scale + min = 3 per weight tensor), never one per expert."""
+    """A rotation moving N experts costs ONE fused scatter dispatch for all
+    tensor planes together (packed + scale + min of every weight tensor),
+    never one per expert or per plane."""
     store = SlotStore(4, _shapes(), jnp.float32, quantization="int4")
     w = {n: rng.standard_normal((3,) + s).astype(np.float32)
          for n, s in _shapes().items()}
     moved = store.write_batch([0, 1, 2], w)
-    assert store.dispatches == 3 * len(_shapes())
+    assert store.dispatches == 1
     assert moved == 3 * store.bytes_per_expert
     assert store.bytes_uploaded == moved
 

@@ -328,3 +328,53 @@ def test_warmup_precompiles_without_changing_outputs(rng):
     eng.run()
     _, ref = _serve(cfg, params, prompts, num_slots=2, max_new=4)
     assert [r.output for r in reqs] == ref
+
+
+# ===========================================================================
+# asynchronous prefetch on the CB tick: shadow generations over the pool
+# ===========================================================================
+def test_cb_prefetch_matches_sync(rng):
+    """The paged CB tick with prefetch=True (shadow-generation uploads under
+    the in-flight window, boundary confirm/correct/flip at margin 0) emits
+    bit-identical tokens to the synchronous-rotation engine on the same
+    trace — prefetch-covered AND slot-starved f32 (host corrections are
+    bitwise against device compute at f32)."""
+    import dataclasses
+
+    from repro.models import init_params
+
+    cfg, _ = params_for("qwen2-moe-a2.7b")
+    cfg = dataclasses.replace(cfg, dtype="float32")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    e = cfg.moe.num_experts
+    prompts = [rng.integers(0, cfg.vocab_size, int(n)).astype(np.int32)
+               for n in (5, 9, 7)]
+    starved = None
+    for slots in (e, 5):
+        res = lambda: ResidencyConfig(mode="rotary", num_slots=slots)
+        _, ref = _serve(cfg, params, prompts, num_slots=3, rescfg=res())
+        eng, got = _serve(cfg, params, prompts, num_slots=3, rescfg=res(),
+                          prefetch=True)
+        assert got == ref, slots
+        starved = eng
+    # the starved engine really rotated through the shadow protocol: slot
+    # uploads happened and the boundary accounting ran
+    assert starved.stats.hits + starved.stats.misses > 0
+    assert starved.stats.bytes_uploaded > 0
+
+
+def test_serving_prefetch_flag_validation(rng):
+    """Loud errors for serving combos with nothing to prefetch."""
+    cfg, params = params_for("qwen2-moe-a2.7b")
+    e = cfg.moe.num_experts
+    rt = lambda: Runtime(cache_len=32)
+    with pytest.raises(ValueError, match="rotating"):
+        ServingEngine(cfg, params, rt=rt(), num_slots=2, prefetch=True)
+    with pytest.raises(ValueError, match="paged"):
+        ServingEngine(cfg, params, rt=rt(), num_slots=2, paged=False,
+                      residency=ResidencyConfig(mode="rotary", num_slots=e),
+                      prefetch=True)
+    with pytest.raises(ValueError, match="reactive"):
+        ServingEngine(cfg, params, rt=rt(), num_slots=2,
+                      residency=ResidencyConfig(mode="lru", num_slots=e),
+                      prefetch=True)
