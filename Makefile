@@ -3,7 +3,7 @@ PYTHON ?= python
 SHELL := /bin/bash
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: dev-deps tier1 ci bench bench-decode smoke-int4 smoke-prefill smoke-serve-cb smoke-prefetch
+.PHONY: dev-deps tier1 ci bench bench-decode smoke-int4 smoke-prefill smoke-serve-cb smoke-prefetch smoke-trace
 
 dev-deps:          ## install test-only deps (hypothesis property coverage)
 	$(PYTHON) -m pip install -r requirements-dev.txt
@@ -41,7 +41,22 @@ smoke-prefetch:    ## asynchronous-prefetch smoke: slot-starved rotary serve
 	  --residency rotary --slots 6 --prefetch --batch 2 --requests 2 \
 	  --prompt-len 8 --max-new 6 --spec-k 2 --cache-len 64
 
-ci: dev-deps tier1 smoke-int4 smoke-prefill smoke-serve-cb smoke-prefetch ## "green" in one command: dev deps + tier-1 + int4, prefill, CB-serve & prefetch smokes
+smoke-trace:       ## observability smoke: traced rotary+prefetch serve writes
+                   ## a Perfetto trace, the contract auditor replays it, and
+                   ## the CB engine's Prometheus exposition is scraped once
+	$(PYTHON) -m repro.launch.serve --arch qwen2-moe-a2.7b --engine rotary \
+	  --residency rotary --slots 6 --prefetch --batch 2 --requests 2 \
+	  --prompt-len 8 --max-new 6 --spec-k 2 --cache-len 64 \
+	  --trace-out .smoke_trace.json
+	$(PYTHON) -m repro.obs .smoke_trace.json
+	$(PYTHON) tools/trace_view.py .smoke_trace.json --top 10
+	$(PYTHON) -m repro.launch.serve --arch qwen2-moe-a2.7b --engine batch \
+	  --residency rotary --spec-cap 2 --requests 3 --batch-slots 2 \
+	  --prompt-len 8 --max-new 4 --cache-len 64 --kv-page-size 8 \
+	  --trace-out .smoke_trace_cb.json --metrics-port 9109
+	$(PYTHON) -m repro.obs .smoke_trace_cb.json
+
+ci: dev-deps tier1 smoke-int4 smoke-prefill smoke-serve-cb smoke-prefetch smoke-trace ## "green" in one command: dev deps + tier-1 + int4, prefill, CB-serve, prefetch & trace smokes
 
 bench:             ## all paper-table / kernel / hot-path benchmarks (emits BENCH_decode.json)
 	$(PYTHON) -m benchmarks.run

@@ -46,6 +46,10 @@ def main():
         print(f"             hit_rate={s['hit_rate']} uploaded={s['bytes_uploaded_MB']}MB "
               f"prefill_chunks={s['prefill_chunks']} spec_windows={s['spec_windows']} "
               f"modeled_ms/token={s['modeled_ms_per_token']}")
+        if rescfg.mode != "full":
+            # per-layer residency breakdown: the first place to look when
+            # hit_rate regresses (which layer misses, rotates backwards?)
+            print(eng.stats.per_layer_table())
     # the exactness contract: residency, chunked prefill and speculation must
     # not change greedy outputs (int4 is exactness-clean within its format,
     # so its tokens may differ from the f16 store's)

@@ -61,6 +61,8 @@ def main():
         print(f"req {r.uid}: prompt={len(r.prompt):2d} out={len(r.output):2d} {status}")
     s = eng.summary()              # engine stats + latency percentiles
     print("\nengine stats:", s)
+    print("per-layer residency:")   # which layer misses / rotates backwards
+    print(eng.stats.per_layer_table())
     print(f"speculation: {s['spec_windows']} windows, accept_rate={s['accept_rate']}")
     print(f"kv pool: {s['kv_pages_hwm']} pages peak, "
           f"{s['kv_pages_allocated']} allocated / {s['kv_pages_released']} released")

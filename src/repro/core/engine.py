@@ -129,6 +129,8 @@ from repro.models import transformer as tfm
 from repro.models import moe as moe_mod
 from repro.models.layers import apply_norm
 from repro.models.transformer import Runtime
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.tracer import resolve_tracer
 
 
 def _np_ffn(hw: Dict[str, np.ndarray], e: int, x: np.ndarray) -> np.ndarray:
@@ -379,6 +381,7 @@ class RotaryEngine:
         spec_k: int = 1,
         prefill_chunk: Optional[int] = None,
         prefetch: bool = False,
+        trace=None,
     ):
         """Decode-path switches (see module docstring for the mechanisms):
 
@@ -436,6 +439,10 @@ class RotaryEngine:
           the exactness machinery (host correction + replay) is unchanged.
           Requires the fused hot path; ``prefetch=False`` (the default)
           keeps the synchronous rotation path as the exactness baseline.
+        * ``trace=Tracer(...)`` — record launch/pull/rotation/prefetch spans
+          into a host-side ring buffer and export Chrome trace-event JSON
+          (``repro.obs``). ``None`` (and a disabled tracer) leave every hot
+          path untouched: emission sites are guarded ``if tr is not None``.
         """
         assert cfg.has_moe, "RotaryEngine requires an MoE architecture"
         self.cfg = cfg
@@ -446,6 +453,9 @@ class RotaryEngine:
         self.host_routing = host_routing
         self.stats = EngineStats()
         self.clock = TransferClock(self.cost)
+        self._tr = resolve_tracer(trace)
+        self.tracer = self._tr
+        self.metrics = MetricsRegistry()
 
         # ---- flatten the layer stack; slice per-layer params -------------
         self.layers: List[Tuple[str, Any]] = []       # (kind, params)
@@ -497,6 +507,7 @@ class RotaryEngine:
             cfg, rescfg, self.host_experts,
             batch=batch, cache_len=self.rt.cache_len,
             cost=self.cost, stats=self.stats, seed=seed,
+            tracer=self._tr, metrics=self.metrics,
         )
         # LRU answers misses with reactive blocking loads mid-step: that needs
         # routed ids on host before the next layer, i.e. the sync walk
@@ -1039,12 +1050,19 @@ class RotaryEngine:
         """One decode step = ONE compiled program launch (plus the rotation's
         batched uploads). Returns host logits [B, V]; see module docstring."""
         cur_len = self.cur_len
+        tr = self._tr
+        if tr is not None:
+            tr.new_unit("decode")
+            t_trace = time.perf_counter()
         residency = self.manager.stacked_residency()
         logits_dev, self._dstate, aux = self._fused_step(
             self._decode_params, self._routers_next, jnp.asarray(tok),
             self._dstate, jnp.int32(cur_len), residency,
         )
         self.stats.device_dispatches += 1
+        if tr is not None:
+            tr.complete("launch", "launch", t_trace, time.perf_counter(),
+                        args={"cur_len": cur_len})
         # async D2H: these complete while the logits pull below drains the
         # queue, so the rotation bookkeeping reads ready host buffers
         for k in self._pull_keys:
@@ -1056,13 +1074,22 @@ class RotaryEngine:
             # so this host work + the scatters overlap the device compute the
             # blocking pull below waits on
             self.manager.begin_prefetch(self.predictor, self.clock)
+        if tr is not None:
+            t_trace = time.perf_counter()
         logits = np.asarray(logits_dev)        # THE one queue-draining pull
         self.stats.sync_pulls += 1
+        if tr is not None:
+            tr.complete("pull", "pull", t_trace, time.perf_counter(),
+                        args={"cur_len": cur_len})
         ids = concat_route_telemetry(aux, "ids", self._moe_segs)      # [L, T, k]
         weights = concat_route_telemetry(aux, "weights", self._moe_segs)
         miss = concat_route_telemetry(aux, "miss", self._moe_segs)
         demand_next = np.asarray(aux["demand_next"])   # [L, E]
         missed = np.flatnonzero(miss.reshape(miss.shape[0], -1).any(axis=1))
+        if tr is not None and missed.size:
+            tr.instant("miss", "launch",
+                       args={"first_moe": int(missed[0]),
+                             "layers": int(missed.size)})
         start_moe = (
             int(missed[0])
             if (missed.size and self.rescfg.host_compute_misses)
@@ -1164,6 +1191,9 @@ class RotaryEngine:
         bit-identical to single-token decode.
         """
         cur_len0 = self.cur_len
+        tr = self._tr
+        if tr is not None:
+            tr.new_unit("window")
         residency = self.manager.stacked_residency()
         step_fn, snap_fn, roll_fn = self._window_fns(k)
         saved = None
@@ -1172,12 +1202,19 @@ class RotaryEngine:
             # write, BEFORE the window donates (and mutates) the state
             saved = snap_fn(self._dstate, jnp.int32(cur_len0))
             self.stats.device_dispatches += 1
+            if tr is not None:
+                tr.instant("kv_snapshot", "launch", args={"k": k})
+        if tr is not None:
+            t_trace = time.perf_counter()
         draft_dev, logits_dev, self._dstate, aux = step_fn(
             self._decode_params, self._routers_next, jnp.asarray(tok),
             self._dstate, jnp.int32(cur_len0), residency,
         )
         self.stats.device_dispatches += 1
         self.stats.spec_windows += 1
+        if tr is not None:
+            tr.complete("launch", "launch", t_trace, time.perf_counter(),
+                        args={"cur_len": cur_len0, "k": k})
         for key in self._pull_keys:
             aux[key].copy_to_host_async()
         draft_dev.copy_to_host_async()
@@ -1186,8 +1223,13 @@ class RotaryEngine:
             # whole window still in flight: shadow-upload the predicted next
             # transition under it (committed at the boundary rotation below)
             self.manager.begin_prefetch(self.predictor, self.clock)
+        if tr is not None:
+            t_trace = time.perf_counter()
         logits = np.asarray(logits_dev)        # THE one queue-draining pull
         self.stats.sync_pulls += 1
+        if tr is not None:
+            tr.complete("pull", "pull", t_trace, time.perf_counter(),
+                        args={"cur_len": cur_len0, "k": k})
         draft = np.asarray(draft_dev)                               # [K, B]
         ids = concat_route_telemetry(aux, "ids", self._moe_segs, axis=1)
         weights = concat_route_telemetry(aux, "weights", self._moe_segs, axis=1)
@@ -1204,6 +1246,10 @@ class RotaryEngine:
         accept = int(greedy_accept(draft, draft).min())
         miss_steps = miss.reshape(k, -1).any(axis=1)                # [K]
         missed = np.flatnonzero(miss_steps)
+        if tr is not None and missed.size:
+            tr.instant("miss", "launch",
+                       args={"first_step": int(missed[0]),
+                             "steps": int(missed.size)})
         j_star = None
         if missed.size and self.rescfg.host_compute_misses:
             j_star = int(missed[0])
@@ -1245,6 +1291,8 @@ class RotaryEngine:
                 self._dstate, saved, jnp.int32(cur_len0), jnp.int32(j_star + 1)
             )
             self.stats.device_dispatches += 1
+            if tr is not None:
+                tr.instant("kv_rollback", "launch", args={"j_star": j_star})
             self._account_step_prefix(
                 ids[j_star], miss[j_star], start_li, cur_len0 + j_star
             )
@@ -1308,6 +1356,9 @@ class RotaryEngine:
                 moved += len(loads) * self.manager.stores[moe_li].bytes_per_expert
             if moved:
                 self.clock.blocking(moved)
+            tr = self._tr
+            if tr is not None:
+                t_trace = time.perf_counter()
             residency = self.manager.stacked_residency()
             logits_dev, self._dstate, aux = self._fused_step(
                 self._decode_params, self._routers_next, jnp.asarray(tok),
@@ -1315,10 +1366,18 @@ class RotaryEngine:
             )
             self.stats.device_dispatches += 1
             self.stats.relaunched_steps += 1
+            if tr is not None:
+                tr.complete("launch", "launch", t_trace, time.perf_counter(),
+                            args={"kind": "relaunch"})
             for k in self._pull_keys:
                 aux[k].copy_to_host_async()
+            if tr is not None:
+                t_trace = time.perf_counter()
             logits = np.asarray(logits_dev)
             self.stats.sync_pulls += 1
+            if tr is not None:
+                tr.complete("pull", "pull", t_trace, time.perf_counter(),
+                            args={"kind": "relaunch"})
             ids = concat_route_telemetry(aux, "ids", self._moe_segs)
             weights = concat_route_telemetry(aux, "weights", self._moe_segs)
             miss = concat_route_telemetry(aux, "miss", self._moe_segs)
@@ -1373,6 +1432,9 @@ class RotaryEngine:
                 moved += len(loads) * self.manager.stores[moe_li].bytes_per_expert
             if moved:
                 self.clock.blocking(moved)
+            tr = self._tr
+            if tr is not None:
+                t_trace = time.perf_counter()
             residency = self.manager.stacked_residency()
             draft_dev, logits_dev, self._dstate, aux = step_fn(
                 self._decode_params, self._routers_next, jnp.asarray(tok),
@@ -1380,11 +1442,19 @@ class RotaryEngine:
             )
             self.stats.device_dispatches += 1
             self.stats.relaunched_steps += 1
+            if tr is not None:
+                tr.complete("launch", "launch", t_trace, time.perf_counter(),
+                            args={"kind": "relaunch"})
             for key in self._pull_keys:
                 aux[key].copy_to_host_async()
             draft_dev.copy_to_host_async()
+            if tr is not None:
+                t_trace = time.perf_counter()
             logits = np.asarray(logits_dev)
             self.stats.sync_pulls += 1
+            if tr is not None:
+                tr.complete("pull", "pull", t_trace, time.perf_counter(),
+                            args={"kind": "relaunch"})
             draft = np.asarray(draft_dev)
             ids = concat_route_telemetry(aux, "ids", self._moe_segs, axis=1)
             weights = concat_route_telemetry(aux, "weights", self._moe_segs, axis=1)
@@ -1419,6 +1489,8 @@ class RotaryEngine:
         cache back past ``step`` BEFORE calling this, so the cache the suffix
         reads holds no writes from rejected positions.
         """
+        tr = self._tr
+        t_trace = time.perf_counter() if tr is not None else 0.0
         si0, r0 = self._moe_pos[start_moe]
         x_anchor = aux[f"route_x/seg{si0}"]
         if step is not None:
@@ -1463,6 +1535,9 @@ class RotaryEngine:
         self.stats.sync_pulls += 1
         self.stats.replay_pulls += 1
         self.stats.replayed_steps += 1
+        if tr is not None:
+            tr.complete("replay", "launch", t_trace, time.perf_counter(),
+                        args={"start_li": start_li, "step": step})
         return logits
 
     def _layer_cost(self, kind: str, xshape, cur_len: int, hits: int) -> Tuple[float, float]:
@@ -1621,12 +1696,16 @@ class RotaryEngine:
         self._dstate = tfm.zero_state(self.cfg, b, self.rt.cache_len)
         plan = prefill_chunk_plan(s, self.prefill_chunk)
         cur, logits = 0, None
+        tr = self._tr
         for ci, c in enumerate(plan):
             last = ci == len(plan) - 1
             step_fn = (
                 self._fused_prefill_step if last
                 else self._fused_prefill_step_nohead
             )
+            if tr is not None:
+                tr.new_unit("chunk")
+                t_trace = time.perf_counter()
             residency = self.manager.stacked_residency()
             logits_dev, self._dstate, aux = step_fn(
                 self._decode_params, self._routers_next,
@@ -1635,6 +1714,9 @@ class RotaryEngine:
             )
             self.stats.device_dispatches += 1
             self.stats.prefill_chunks += 1
+            if tr is not None:
+                tr.complete("launch", "launch", t_trace, time.perf_counter(),
+                            args={"chunk": c, "cur_len": cur})
             for k in self._prefill_pull_keys:
                 aux[k].copy_to_host_async()
             self.stats.overlapped_pulls += len(self._prefill_pull_keys)
@@ -1650,15 +1732,24 @@ class RotaryEngine:
                 # chunk launch in flight: shadow-upload the predicted next
                 # chunk-boundary transition under it
                 self.manager.begin_prefetch(self.predictor, self.clock)
+            if tr is not None:
+                t_trace = time.perf_counter()
             if last:
                 logits = np.asarray(logits_dev)  # THE queue-draining pull
             self.stats.sync_pulls += 1
             # non-final chunks have no head output: the first telemetry read
             # below is their one queue-draining pull instead
             ids = concat_route_telemetry(aux, "ids", self._moe_segs)  # [L,T,k]
+            if tr is not None:
+                tr.complete("pull", "pull", t_trace, time.perf_counter(),
+                            args={"chunk": c})
             weights = concat_route_telemetry(aux, "weights", self._moe_segs)
             miss = concat_route_telemetry(aux, "miss", self._moe_segs)
             missed = np.flatnonzero(miss.reshape(miss.shape[0], -1).any(axis=1))
+            if tr is not None and missed.size:
+                tr.instant("miss", "launch",
+                           args={"first_moe": int(missed[0]),
+                                 "layers": int(missed.size)})
             start_moe = (
                 int(missed[0])
                 if (missed.size and self.rescfg.host_compute_misses)
@@ -1728,6 +1819,8 @@ class RotaryEngine:
         chunk but the prompt's last) skips the lm-head GEMM and its logits
         pull — only the final chunk's logits are consumed.
         """
+        tr = self._tr
+        t_replay = time.perf_counter() if tr is not None else 0.0
         si0, r0 = self._moe_pos[start_moe]
         x = aux[f"route_x/seg{si0}"][r0].reshape(self.batch, chunk, -1)
         self.stats.device_dispatches += 1             # device-side slice
@@ -1770,6 +1863,9 @@ class RotaryEngine:
                 clock.compute(self.cost.compute_s(flops, byts), needs_dma=False)
             self._set_layer_state(li, new_state)
         self.stats.prefill_replays += 1
+        if tr is not None:
+            tr.complete("replay", "launch", t_replay, time.perf_counter(),
+                        args={"start_li": start_li, "chunk": chunk})
         if not with_head:
             return None
         logits = np.asarray(self._lm_head(x[:, -1:])[:, 0])
@@ -1811,6 +1907,7 @@ class RotaryEngine:
                     [rng.choice(p.shape[-1], p=row) for row in p], np.int32
                 )
             out[:, i] = tok
+            t_win = time.perf_counter()
             k = min(self.spec_k, steps - i) if spec else 1
             if k > 1:
                 extra, logits, committed = self._decode_window_fused(tok, k)
@@ -1832,6 +1929,9 @@ class RotaryEngine:
             self.cur_len += advanced
             self.stats.steps += advanced
             self.stats.tokens += self.batch * advanced
+            self.metrics.histogram(
+                "window_ms", "wall ms per decode step/window"
+            ).observe((time.perf_counter() - t_win) * 1e3)
         self.stats.wall_s += time.perf_counter() - t0
         self.stats.compute_s = self.clock.compute_s
         self.stats.transfer_s = self.clock.transfer_s

@@ -48,6 +48,8 @@ from repro.core.slots import (
 )
 from repro.core.stats import EngineStats
 from repro.core.transfer import CostModel, TransferClock
+from repro.obs.metrics import BYTES_BUCKETS
+from repro.obs.tracer import resolve_tracer
 
 
 # Dirty-slot patches into the persistent stacked planes: one dispatch per
@@ -242,6 +244,8 @@ class RotaryResidencyManager:
         cost: Optional[CostModel] = None,
         stats: Optional[EngineStats] = None,
         seed: int = 0,
+        tracer=None,
+        metrics=None,
     ):
         report = check_feasibility(cfg, rescfg, batch=batch, cache_len=cache_len)
         if not report.ok:
@@ -251,6 +255,11 @@ class RotaryResidencyManager:
         self.report = report
         self.cost = cost or CostModel()
         self.stats = stats or EngineStats()
+        # optional observability handles threaded by the owning engine; both
+        # default to None and every emission site is guarded, so the
+        # untraced hot path is untouched
+        self.tracer = resolve_tracer(tracer)
+        self.metrics = metrics
         self.host_experts = host_experts
         m = cfg.moe
         slots = rescfg.num_slots or m.num_experts
@@ -390,6 +399,16 @@ class RotaryResidencyManager:
             tracked = self._shadow_contents if shadow else self._live_contents
             for e, s in loads:
                 tracked[layer][int(s)] = int(e)
+        tr = self.tracer
+        if tr is not None:
+            tr.instant("upload", "prefetch" if shadow else "rotation",
+                       args={"layer": layer, "bytes": moved,
+                             "n": len(loads), "shadow": shadow})
+        if self.metrics is not None:
+            self.metrics.histogram(
+                "upload_bytes", "bytes per slot-upload dispatch",
+                buckets=BYTES_BUCKETS,
+            ).observe(moved)
         return moved
 
     def _write_through_loads(
@@ -617,7 +636,15 @@ class RotaryResidencyManager:
             self._sim_skip = self._sim_backoff
             self._sim_backoff = min(self._sim_backoff * 2, 16)
         self.stats.prefetch_launched += launched
-        self.stats.overlap_ms += (time.perf_counter() - t0) * 1e3
+        t1 = time.perf_counter()
+        # legacy wall-clock accounting; when tracing is on, the SAME window
+        # is also recorded as a ``prefetch_ship`` span so ``overlap_ms`` can
+        # be derived from the trace and cross-checked against this counter
+        self.stats.overlap_ms += (t1 - t0) * 1e3
+        tr = self.tracer
+        if tr is not None:
+            tr.complete("prefetch_ship", "prefetch", t0, t1,
+                        args={"bytes": total, "launched": launched})
         return total
 
     def _commit_layer(
@@ -652,9 +679,14 @@ class RotaryResidencyManager:
                 wasted += 1
         self.stats.prefetch_hits += hits
         self.stats.prefetch_wasted_bytes += wasted * store.bytes_per_expert
+        tr = self.tracer
         if not loads:
             # nothing rotated: keep the live generation, let the shadow drift
             # (any speculative writes become next boundary's catch-up slots)
+            if tr is not None and plan:
+                tr.instant("prefetch_commit", "prefetch",
+                           args={"layer": layer, "hits": hits,
+                                 "wasted": wasted, "outcome": "drift"})
             return 0
         if useful == 0:
             # the shadow holds no byte this transition can reuse: the flip
@@ -668,6 +700,11 @@ class RotaryResidencyManager:
             ls.bytes_loaded += moved
             if clock is not None:
                 clock.prefetch(moved)
+            if tr is not None:
+                tr.instant("prefetch_commit", "prefetch",
+                           args={"layer": layer, "hits": hits,
+                                 "wasted": wasted,
+                                 "outcome": "live_fallback"})
             return moved
         # (1) mispredicted / unpredicted load slots: host-upload corrections
         corrections = [(e, s) for e, s in loads if shadow.get(int(s)) != int(e)]
@@ -688,6 +725,11 @@ class RotaryResidencyManager:
         self._shadow_contents[layer] = live
         self._stacked_dirty[layer].update(int(s) for _, s in loads)
         self.generation += 1
+        if tr is not None:
+            tr.instant("prefetch_commit", "prefetch",
+                       args={"layer": layer, "hits": hits, "wasted": wasted,
+                             "corrections": len(corrections),
+                             "stale": len(stale), "outcome": "flip"})
         ls = self.stats.layer(layer)
         ls.loads += len(loads)
         ls.bytes_loaded += moved
@@ -696,6 +738,24 @@ class RotaryResidencyManager:
         return moved
 
     def rotate_from_telemetry(
+        self,
+        predictor,
+        ids: np.ndarray,
+        weights: np.ndarray,
+        miss: np.ndarray,
+        demand_next: np.ndarray,
+        clock: Optional[TransferClock] = None,
+        record: bool = True,
+    ) -> None:
+        tr = self.tracer
+        if tr is None:
+            return self._rotate_from_telemetry(
+                predictor, ids, weights, miss, demand_next, clock, record)
+        with tr.span("rotation", "rotation", args={"kind": "step"}):
+            return self._rotate_from_telemetry(
+                predictor, ids, weights, miss, demand_next, clock, record)
+
+    def _rotate_from_telemetry(
         self,
         predictor,                       # DemandPredictor
         ids: np.ndarray,                 # [L, T, k] routed expert ids
@@ -747,6 +807,27 @@ class RotaryResidencyManager:
         return [(e, s) for s, e in final.items() if lut.s2e[s] == e]
 
     def rotate_window_from_telemetry(
+        self,
+        predictor,
+        ids: np.ndarray,
+        weights: np.ndarray,
+        miss: np.ndarray,
+        demand_next: np.ndarray,
+        clock: Optional[TransferClock] = None,
+        record: bool = True,
+        accepted: Optional[np.ndarray] = None,
+    ) -> None:
+        tr = self.tracer
+        if tr is None:
+            return self._rotate_window_from_telemetry(
+                predictor, ids, weights, miss, demand_next, clock, record,
+                accepted)
+        with tr.span("rotation", "rotation", args={"kind": "window"}):
+            return self._rotate_window_from_telemetry(
+                predictor, ids, weights, miss, demand_next, clock, record,
+                accepted)
+
+    def _rotate_window_from_telemetry(
         self,
         predictor,                       # DemandPredictor
         ids: np.ndarray,                 # [K, L, T, k] routed ids per window step

@@ -125,6 +125,43 @@ class EngineStats:
             return 0.0
         return (self.compute_s + self.stall_s + self.host_compute_s) / self.steps
 
+    def per_layer(self) -> List[Dict[str, float]]:
+        """Per-layer residency table (one row per MoE layer, index order).
+
+        Surfaces the rotation-direction counters ``LayerStats`` has always
+        tracked but ``summary()`` aggregates away — a layer rotating
+        backwards (reverse_rotations) or re-loading heavily is the first
+        thing to look at when ``hit_rate`` regresses.
+        """
+        rows: List[Dict[str, float]] = []
+        for idx in sorted(self.layers):
+            l = self.layers[idx]
+            rows.append({
+                "layer": idx,
+                "hit_rate": round(l.hit_rate, 4),
+                "hits": l.hits,
+                "misses": l.misses,
+                "host_computed": l.host_computed,
+                "loads": l.loads,
+                "bytes_loaded_MB": round(l.bytes_loaded / 2**20, 3),
+                "forward_rotations": l.forward_rotations,
+                "reverse_rotations": l.reverse_rotations,
+            })
+        return rows
+
+    def per_layer_table(self) -> str:
+        """``per_layer()`` pretty-printed for the examples / CLI."""
+        header = (f"{'layer':>5} {'hit_rate':>8} {'misses':>7} {'loads':>6} "
+                  f"{'MB':>8} {'fwd_rot':>7} {'rev_rot':>7}")
+        lines = [header]
+        for r in self.per_layer():
+            lines.append(
+                f"{r['layer']:>5} {r['hit_rate']:>8.4f} {r['misses']:>7} "
+                f"{r['loads']:>6} {r['bytes_loaded_MB']:>8.3f} "
+                f"{r['forward_rotations']:>7} {r['reverse_rotations']:>7}"
+            )
+        return "\n".join(lines)
+
     def summary(self) -> Dict[str, float]:
         return {
             "steps": self.steps,

@@ -83,6 +83,15 @@ def main() -> None:
                     help="pre-compile the batch-engine program family before "
                          "serving (first-request latency then measures "
                          "serving, not tracing)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="capture an event-level trace of the run and write "
+                         "Chrome trace-event JSON (load in Perfetto / "
+                         "chrome://tracing; audit with "
+                         "`python -m repro.obs.audit PATH`)")
+    ap.add_argument("--metrics-port", type=int, default=0,
+                    help="serve live Prometheus metrics on "
+                         "127.0.0.1:PORT/metrics while the run is in flight "
+                         "(0 = off; batch engine only)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -95,6 +104,10 @@ def main() -> None:
 
     cfg = reduce_for_smoke(get_config(args.arch))
     params = init_params(cfg, jax.random.PRNGKey(args.seed))
+    tracer = None
+    if args.trace_out:
+        from repro.obs import Tracer
+        tracer = Tracer()
     rt = Runtime(cache_len=args.cache_len)
     rng = np.random.default_rng(args.seed)
     slots = args.slots or (cfg.moe.num_experts * 3 // 4 if cfg.has_moe else 0)
@@ -120,6 +133,7 @@ def main() -> None:
             spec_k=max(1, args.spec_k),
             prefill_chunk=args.prefill_chunk or None,
             prefetch=args.prefetch,
+            trace=tracer,
         )
         # serve requests in decode groups of --batch (device-resident hot path
         # amortizes the per-step host interaction over all rows of the group)
@@ -132,6 +146,11 @@ def main() -> None:
             for i in range(n):
                 print(f"req {g0 + i}: {out[i].tolist()}")
         print("stats:", eng.stats.summary())
+        print("per-layer residency:")
+        print(eng.stats.per_layer_table())
+        if tracer is not None:
+            tracer.write(args.trace_out)
+            print(f"trace: {len(tracer)} events -> {args.trace_out}")
         return
 
     eng = ServingEngine(
@@ -141,7 +160,13 @@ def main() -> None:
         kv_page_size=args.kv_page_size,
         kv_pages=args.kv_pages or None,
         prefetch=args.prefetch,
+        trace=tracer,
     )
+    metrics_server = None
+    if args.metrics_port:
+        from repro.obs import serve_metrics
+        metrics_server = serve_metrics(eng.metrics_registry, args.metrics_port)
+        print(f"metrics: http://127.0.0.1:{args.metrics_port}/metrics")
     if args.warmup:
         n = eng.warmup(max_prompt_len=args.prompt_len)
         print(f"warmup: {n} programs compiled")
@@ -173,6 +198,17 @@ def main() -> None:
     for r in done:
         print(f"req {r.uid}: prompt_len={len(r.prompt)} -> {r.output}")
     print("stats:", eng.summary())
+    if metrics_server is not None:
+        # self-scrape once so CI can assert the exposition round-trips
+        from urllib.request import urlopen
+        body = urlopen(
+            f"http://127.0.0.1:{args.metrics_port}/metrics"
+        ).read().decode()
+        print(f"metrics: scraped {len(body.splitlines())} exposition lines")
+        metrics_server.shutdown()
+    if tracer is not None:
+        tracer.write(args.trace_out)
+        print(f"trace: {len(tracer)} events -> {args.trace_out}")
 
 
 if __name__ == "__main__":

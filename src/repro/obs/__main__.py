@@ -1,0 +1,10 @@
+"""``python -m repro.obs TRACE.json`` — run the contract auditor on a trace.
+
+Equivalent to ``python -m repro.obs.audit`` but avoids runpy's re-execution
+warning (the package eagerly imports the audit module).
+"""
+import sys
+
+from repro.obs.audit import main
+
+sys.exit(main(sys.argv[1:]))

@@ -62,6 +62,8 @@ from repro.core.residency import RotaryResidencyManager
 from repro.core.stats import EngineStats
 from repro.models import transformer as tfm
 from repro.models.transformer import Runtime
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.tracer import resolve_tracer
 from repro.serving.kv_pool import KVPagePool
 from repro.serving.sampler import Sampler, SamplerConfig
 from repro.serving.scheduler import Request, Scheduler
@@ -86,6 +88,7 @@ class ServingEngine:
         kv_page_size: int = 16,
         kv_pages: Optional[int] = None,
         prefetch: bool = False,
+        trace=None,
     ):
         """``spec_cap`` bounds per-row speculative decode: when sampling is
         greedy and the stack is KV-cache-only, windows self-draft up to the
@@ -118,7 +121,12 @@ class ServingEngine:
         the expert dropped), so transitions must stay byte-identical to the
         synchronous baseline for outputs to stay byte-identical — only the
         overlap is bought. Requires the paged pool and a rotating residency
-        manager."""
+        manager.
+
+        ``trace`` (a ``repro.obs.Tracer``) records launch/pull/rotation/
+        prefetch spans plus one lane per request (queued → prefill → decode
+        → finish) and the KV pool's page events; ``None``/disabled leaves
+        every hot path untouched (all emission sites are guarded)."""
         self.cfg = cfg
         self.params = params
         self.rt = rt or Runtime(cache_len=1024)
@@ -126,6 +134,9 @@ class ServingEngine:
         self.eos = eos
         self.sampler = Sampler(sampler or SamplerConfig())
         self.stats = EngineStats()
+        self._tr = resolve_tracer(trace)
+        self.tracer = self._tr
+        self.metrics = MetricsRegistry()
         kv_only = all(k in _KV_ONLY_KINDS for k in cfg.layer_kinds)
         if paged is None:
             paged = kv_only
@@ -172,7 +183,8 @@ class ServingEngine:
                     f"kv_pages={pages} cannot hold one full row "
                     f"({row_pages} pages of {page_size})"
                 )
-            self.pool = KVPagePool(pages, page_size, row_pages)
+            self.pool = KVPagePool(pages, page_size, row_pages,
+                                   tracer=self._tr)
             # physical plane index 0 is the scratch page pad rows write into
             self.pool_state = tfm.paged_zero_state(cfg, pages + 1, page_size)
         else:
@@ -206,6 +218,7 @@ class ServingEngine:
             self.res_mgr = RotaryResidencyManager(
                 cfg, residency, host_experts,
                 batch=batch_eff, cache_len=self.rt.cache_len, stats=self.stats,
+                tracer=self._tr, metrics=self.metrics,
             )
             self.predictor = DemandPredictor(routers, ema=residency.predictor_ema)
             for li in range(len(host_experts)):
@@ -427,6 +440,15 @@ class ServingEngine:
         """A finished row leaves the window: its pages return to the pool NOW
         and the next queued request prefills into them at the next tick —
         the continuous-batching lever the group tick lacked."""
+        tr = self._tr
+        if tr is not None:
+            # lane phase 3: first token -> finished (the decode stretch)
+            t1 = req.finished_at or time.perf_counter()
+            if req.first_token_at:
+                tr.complete("decode", "request", req.first_token_at, t1,
+                            lane=req.uid, args={"tokens": len(req.output)})
+            tr.instant("finish", "request", lane=req.uid,
+                       args={"tokens": len(req.output)})
         if self.pool is not None:
             self.stats.kv_pages_released += self.pool.release(req.uid)
 
@@ -573,9 +595,14 @@ class ServingEngine:
         --arrival-rate``, ``benchmarks/serving_load.py``) can interleave
         submissions with ticks on the wall clock."""
         now = time.perf_counter()
-        for req, logits, row_state in self._prefill_admitted(
-            self.scheduler.admit(now, pool=self.pool)
-        ):
+        tr = self._tr
+        admitted = self.scheduler.admit(now, pool=self.pool)
+        if tr is not None:
+            for req in admitted:
+                # lane phase 1: submission -> admission (queueing delay)
+                tr.complete("queued", "request", req.submitted_at, now,
+                            lane=req.uid, args={"prompt": len(req.prompt)})
+        for req, logits, row_state in self._prefill_admitted(admitted):
             if self.pool is not None:
                 self._account_pages(self.pool.ensure(req.uid, len(req.prompt)))
                 self._splice_row_paged(req.uid, row_state)
@@ -588,6 +615,11 @@ class ServingEngine:
             self.stats.tokens += len(req.prompt)
             # first sampled token may already finish the request
             self.scheduler.step_done(req.slot, tok, now, self.eos)
+            if tr is not None:
+                # lane phase 2: admission -> spliced + first token sampled
+                tr.complete("prefill", "request", req.admitted_at,
+                            time.perf_counter(), lane=req.uid,
+                            args={"prompt": len(req.prompt)})
             if req.done:
                 self.active[req.slot] = False
                 self._release_request(req)
@@ -635,6 +667,10 @@ class ServingEngine:
         live = [s for s in sorted(sch.running) if self.active[s]]
         if not live:
             return
+        tr = self._tr
+        t_tick = time.perf_counter()
+        if tr is not None:
+            tr.new_unit("tick")
         k = 1
         if self._spec_ok:
             k = min(sch.spec_len(s) for s in live)
@@ -653,6 +689,14 @@ class ServingEngine:
             pt[i] = self.pool.table_array(sch.running[s].uid)
             tok[i] = self.next_token[s]
             lens[i] = self.lengths[s]
+        if tr is not None:
+            # every physical page this window will read/write, for the
+            # auditor's use-after-release replay
+            tr.instant("kv_use", "kv_pool", args={
+                "pages": sorted({int(p) for row in pt[: len(live)]
+                                 for p in row if p}),
+                "rows": len(live),
+            })
         step_fn, snap_fn, roll_fn = self._window_fns(k)
         residency = None
         if self.res_mgr is not None:
@@ -666,10 +710,17 @@ class ServingEngine:
             # pre-window planes.
             saved = snap_fn(self.pool_state, lens_j, pt_j)
             self.stats.device_dispatches += 1
+            if tr is not None:
+                tr.instant("kv_snapshot", "kv_pool", args={"rows": len(live)})
+        if tr is not None:
+            t_launch = time.perf_counter()
         draft, last_logits, self.pool_state, aux = step_fn(
             self.params, self._routers_next, jnp.asarray(tok),
             self.pool_state, lens_j, residency, pt_j,
         )
+        if tr is not None:
+            tr.complete("launch", "launch", t_launch, time.perf_counter(),
+                        args={"rows": len(live), "k": k})
         self.stats.device_dispatches += 1
         self.stats.windows += 1
         if k > 1:
@@ -685,12 +736,17 @@ class ServingEngine:
                 # between ticks just drift the shadow — the next commit's
                 # catch-up copies reconcile it)
                 self.res_mgr.begin_prefetch(self.predictor)
+        if tr is not None:
+            t_pull = time.perf_counter()
         if self.sampler.cfg.temperature <= 0.0:
             draft_np = np.asarray(draft)       # [K, rows]: THE queue-draining pull
         else:
             # sampled serving runs size-1 windows (spec_ok is false): the
             # host draws from the window's f32 last-position logits
             draft_np = self.sampler(np.asarray(last_logits))[None, :]
+        if tr is not None:
+            tr.complete("pull", "pull", t_pull, time.perf_counter(),
+                        args={"rows": len(live), "k": k})
         self.stats.sync_pulls += 1
         accepted = np.zeros((rows,), np.int32)
         accepted[: len(live)] = k
@@ -701,6 +757,10 @@ class ServingEngine:
             any_miss = step_row_miss.any(axis=0)
             first = np.where(any_miss, step_row_miss.argmax(axis=0), k)
             accepted[: len(live)] = np.maximum(first[: len(live)], 1)
+            if tr is not None and bool(any_miss[: len(live)].any()):
+                tr.instant("miss", "launch", args={
+                    "rows": int(any_miss[: len(live)].sum()), "k": k,
+                })
         # a finishing row commits only what it can still emit; ``offered`` =
         # drafts the row could have used (the accept-rate denominator, so
         # unused tail drafts don't read as rejections)
@@ -715,6 +775,10 @@ class ServingEngine:
                 self.pool_state, saved, lens_j, jnp.asarray(accepted), pt_j
             )
             self.stats.device_dispatches += 1
+            if tr is not None:
+                tr.instant("kv_rollback", "kv_pool", args={
+                    "accepted": [int(a) for a in accepted[: len(live)]],
+                })
         now = time.perf_counter()
         fed_total = 0
         k_committed = 0
@@ -729,6 +793,9 @@ class ServingEngine:
                 self.next_token[s] = t
                 sch.step_done(s, t, now, self.eos)
                 fed += 1
+                if tr is not None:
+                    tr.instant("token", "request", lane=req.uid,
+                               args={"tok": t})
                 if req.done:
                     self.active[s] = False
                     self._release_request(req)
@@ -752,11 +819,18 @@ class ServingEngine:
                 np.asarray(aux["demand_next"]),
                 accepted=accepted,
             )
+        self.metrics.histogram(
+            "window_ms", "wall ms per serving window"
+        ).observe((time.perf_counter() - t_tick) * 1e3)
 
     # ------------------------------------------------------------------
     def _tick_single(self) -> None:
         """Group-tick single-token decode (recurrent archs / ``paged=False``):
         one fused ``decode_model`` step over the fixed contiguous batch."""
+        tr = self._tr
+        if tr is not None:
+            tr.new_unit("tick")
+            t_launch = time.perf_counter()
         residency = None
         if self.res_mgr is not None:
             residency = self.res_mgr.stacked_residency()
@@ -768,6 +842,8 @@ class ServingEngine:
             jnp.asarray(self.lengths),
             residency,
         )
+        if tr is not None:
+            tr.complete("launch", "launch", t_launch, time.perf_counter())
         self.stats.device_dispatches += 1
         if self.res_mgr is not None:
             # start D2H copies of the routing/demand telemetry now: they
@@ -777,7 +853,11 @@ class ServingEngine:
                 if k.startswith("route_") or k == "demand_next":
                     v.copy_to_host_async()
                     self.stats.overlapped_pulls += 1
+        if tr is not None:
+            t_pull = time.perf_counter()
         logits_np = np.asarray(logits)
+        if tr is not None:
+            tr.complete("pull", "pull", t_pull, time.perf_counter())
         self.stats.sync_pulls += 1
         self.lengths += self.active
         toks = self.sampler(logits_np)
@@ -810,6 +890,9 @@ class ServingEngine:
         has had a chance to fix residency. Accept outcomes feed the
         scheduler's per-row speculative lengths.
         """
+        tr = self._tr
+        if tr is not None:
+            tr.new_unit("tick")
         step_fn, snap_fn, roll_fn = self._window_fns(k)
         residency = None
         if self.res_mgr is not None:
@@ -820,10 +903,17 @@ class ServingEngine:
             # pre-window KV slot contents: misses may reject per-row suffixes
             saved = snap_fn(self.state, lengths)
             self.stats.device_dispatches += 1
+            if tr is not None:
+                tr.instant("kv_snapshot", "kv_pool")
+        if tr is not None:
+            t_launch = time.perf_counter()
         draft, _logits, self.state, aux = step_fn(
             self.params, self._routers_next,
             jnp.asarray(self.next_token), self.state, lengths, residency,
         )
+        if tr is not None:
+            tr.complete("launch", "launch", t_launch, time.perf_counter(),
+                        args={"k": k})
         self.stats.device_dispatches += 1
         self.stats.spec_windows += 1
         if self.res_mgr is not None:
@@ -831,7 +921,12 @@ class ServingEngine:
                 if key.startswith("route_") or key == "demand_next":
                     v.copy_to_host_async()
                     self.stats.overlapped_pulls += 1
+        if tr is not None:
+            t_pull = time.perf_counter()
         draft_np = np.asarray(draft)           # [K, B]: THE queue-draining pull
+        if tr is not None:
+            tr.complete("pull", "pull", t_pull, time.perf_counter(),
+                        args={"k": k})
         self.stats.sync_pulls += 1
         accepted = np.where(self.active, k, 0).astype(np.int32)
         miss = None
@@ -843,6 +938,10 @@ class ServingEngine:
             accepted = np.where(
                 self.active, np.maximum(first, 1), 0
             ).astype(np.int32)
+            if tr is not None and bool((any_miss & self.active).any()):
+                tr.instant("miss", "launch", args={
+                    "rows": int((any_miss & self.active).sum()), "k": k,
+                })
         # a finishing row commits only what it can still emit: drafting past
         # max_new must not advance lengths or count as accepted throughput.
         # ``offered`` = drafts the row could have used — the accept-rate
@@ -858,6 +957,8 @@ class ServingEngine:
                 self.state, saved, lengths, jnp.asarray(accepted)
             )
             self.stats.device_dispatches += 1
+            if tr is not None:
+                tr.instant("kv_rollback", "kv_pool")
         self.lengths += accepted
         now = time.perf_counter()
         fed_total = 0
@@ -913,26 +1014,31 @@ class ServingEngine:
     def latency_summary(self) -> Dict[str, float]:
         """TTFT + inter-token latency percentiles over COMPLETED requests
         (the load-generator's goodput rows; wall-clock, so only meaningful
-        when requests were submitted at their real arrival times)."""
+        when requests were submitted at their real arrival times).
+
+        Backed by the metrics registry: the ``ttft_ms`` / ``itl_ms``
+        histograms are rebuilt from the scheduler's completed set on every
+        call (reset + re-observe keeps the call idempotent), then read back
+        via :meth:`Histogram.percentile` — raw samples are retained, so the
+        numbers match the legacy ``np.percentile`` output exactly. The same
+        histograms feed the Prometheus exposition (``--metrics-port``)."""
         done = self.scheduler.completed
-        ttft = [
-            r.first_token_at - r.submitted_at
-            for r in done if r.first_token_at
-        ]
-        itl: List[float] = []
+        ttft = self.metrics.histogram("ttft_ms", "time to first token (ms)")
+        itl = self.metrics.histogram("itl_ms", "inter-token latency (ms)")
+        ttft.reset()
+        itl.reset()
         for r in done:
+            if r.first_token_at:
+                ttft.observe(1e3 * (r.first_token_at - r.submitted_at))
             ts = r.token_times
-            itl.extend(b - a for a, b in zip(ts, ts[1:]))
-
-        def pct(xs: List[float], q: float) -> float:
-            return float(np.percentile(np.asarray(xs), q)) if xs else 0.0
-
+            for a, b in zip(ts, ts[1:]):
+                itl.observe(1e3 * (b - a))
         return {
             "completed": len(done),
-            "ttft_p50_ms": round(1e3 * pct(ttft, 50), 3),
-            "ttft_p99_ms": round(1e3 * pct(ttft, 99), 3),
-            "itl_p50_ms": round(1e3 * pct(itl, 50), 3),
-            "itl_p99_ms": round(1e3 * pct(itl, 99), 3),
+            "ttft_p50_ms": round(ttft.percentile(50), 3),
+            "ttft_p99_ms": round(ttft.percentile(99), 3),
+            "itl_p50_ms": round(itl.percentile(50), 3),
+            "itl_p99_ms": round(itl.percentile(99), 3),
         }
 
     def summary(self) -> Dict[str, float]:
@@ -940,3 +1046,12 @@ class ServingEngine:
         out = self.stats.summary()
         out.update(self.latency_summary())
         return out
+
+    def metrics_registry(self) -> "MetricsRegistry":
+        """Refresh and return the registry for Prometheus scrapes: rebuilds
+        the latency histograms and mirrors the aggregate ``EngineStats``
+        counters into ``engine_*`` gauges (called per scrape by
+        ``serve.py --metrics-port``)."""
+        self.latency_summary()
+        self.metrics.set_from(self.stats.summary())
+        return self.metrics

@@ -46,8 +46,12 @@ class PagePoolError(RuntimeError):
 
 
 class KVPagePool:
-    def __init__(self, num_pages: int, page_size: int, row_pages: int):
+    def __init__(self, num_pages: int, page_size: int, row_pages: int,
+                 tracer=None):
         assert num_pages >= row_pages >= 1 and page_size >= 1
+        # optional repro.obs.Tracer: reserve/ensure/release emit page-id
+        # events the contract auditor replays for use-after-release checks
+        self.tracer = tracer
         self.num_pages = num_pages          # allocatable pages (ids 1..num_pages)
         self.page_size = page_size
         self.row_pages = row_pages          # pages a full row spans (cap/page_size)
@@ -93,6 +97,9 @@ class KVPagePool:
         if pages > self.pages_reservable:
             return False
         self._reserved[uid] = pages
+        if self.tracer is not None:
+            self.tracer.instant("kv_reserve", "kv_pool",
+                                args={"uid": uid, "pages": pages})
         return True
 
     def ensure(self, uid: int, tokens: int) -> int:
@@ -113,6 +120,9 @@ class KVPagePool:
                 raise PagePoolError(f"page pool exhausted growing uid {uid}")
             tbl.append(self._free.pop())
             grew += 1
+        if grew and self.tracer is not None:
+            self.tracer.instant("kv_ensure", "kv_pool",
+                                args={"uid": uid, "pages": tbl[-grew:]})
         return grew
 
     def release(self, uid: int) -> int:
@@ -122,6 +132,9 @@ class KVPagePool:
         freed = self._tables.pop(uid, [])
         self._reserved.pop(uid, None)
         self._free.extend(reversed(freed))     # LIFO: newest-freed reused first
+        if freed and self.tracer is not None:
+            self.tracer.instant("kv_release", "kv_pool",
+                                args={"uid": uid, "pages": list(freed)})
         return len(freed)
 
     # -- device view -------------------------------------------------------

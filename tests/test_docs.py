@@ -20,7 +20,7 @@ def test_makefile_targets_match_roadmap():
     makefile = _read("Makefile")
     for target in ("tier1", "ci", "bench", "bench-decode",
                    "smoke-int4", "smoke-prefill", "smoke-serve-cb",
-                   "smoke-prefetch"):
+                   "smoke-prefetch", "smoke-trace"):
         assert f"make {target}" in roadmap or f"`{target}`" in roadmap, (
             f"ROADMAP no longer documents the `{target}` make target"
         )
@@ -35,7 +35,7 @@ def test_makefile_targets_match_roadmap():
     # ci = dev-deps + tier1 + both smokes, as ROADMAP claims
     ci_line = re.search(r"^ci:\s*(.+?)(?:\s*##|$)", makefile, re.M).group(1)
     for dep in ("dev-deps", "tier1", "smoke-int4", "smoke-prefill",
-                "smoke-serve-cb", "smoke-prefetch"):
+                "smoke-serve-cb", "smoke-prefetch", "smoke-trace"):
         assert dep in ci_line, (dep, ci_line)
     # bench-decode rows ROADMAP/benchmarks README describe are actually passed
     assert "--spec-k" in makefile and "--quantization" in makefile
@@ -52,7 +52,12 @@ def test_architecture_doc_exists_and_is_linked():
                    "int4", "replay", "ServingEngine", "prefill",
                    "KVPagePool", "page table", "continuous batching",
                    "shadow generation", "prefetch", "flip", "relaunch",
-                   "write-through"):
+                   "write-through",
+                   # the observability section: tracks/lanes map, the
+                   # span->machine mapping, and the auditor invariant list
+                   "Tracer", "Perfetto", "auditor", "prefetch_ship",
+                   "kv_use", "MetricsRegistry", "Prometheus",
+                   "one launch", "trace-out"):
         assert needle.lower() in arch.lower(), needle
 
 
@@ -63,7 +68,10 @@ def test_benchmarks_readme_documents_the_json():
                    "BENCH_serving.json", "serving_load", "goodput",
                    "ttft_p99", "arrival",
                    "fused_rotary_pf", "overlap_ms", "relaunched_steps",
-                   "prefetch_wasted_bytes", "1.5x"):
+                   "prefetch_wasted_bytes", "1.5x",
+                   # tracing/metrics flags + the tracing-overhead row
+                   "--trace-out", "--metrics-port", "trace_overhead_ratio",
+                   "repro.obs", "3%"):
         assert needle.lower() in readme.lower(), needle
 
 
@@ -71,10 +79,10 @@ def test_examples_show_current_flags():
     """The examples demonstrate the flags the engines actually take today."""
     quick = _read("examples/quickstart.py")
     serve = _read("examples/serve_rotary.py")
-    for needle in ("prefill_chunk", "spec_k", "int4"):
+    for needle in ("prefill_chunk", "spec_k", "int4", "per_layer_table"):
         assert needle in quick, needle
     for needle in ("spec_cap", "bucketed_prefill", "int4",
-                   "kv_page_size", "ttft_p50_ms"):
+                   "kv_page_size", "ttft_p50_ms", "per_layer_table"):
         assert needle in serve, needle
     # and those kwargs really exist on the engines (drift in the other
     # direction: examples naming parameters that were renamed away)
@@ -85,11 +93,11 @@ def test_examples_show_current_flags():
 
     rotary_params = inspect.signature(RotaryEngine.__init__).parameters
     for kw in ("prefill_chunk", "spec_k", "host_routing", "fused_decode",
-               "prefetch"):
+               "prefetch", "trace"):
         assert kw in rotary_params, kw
     serving_params = inspect.signature(ServingEngine.__init__).parameters
     for kw in ("spec_cap", "bucketed_prefill", "residency",
-               "paged", "kv_pages", "kv_page_size", "prefetch"):
+               "paged", "kv_pages", "kv_page_size", "prefetch", "trace"):
         assert kw in serving_params, kw
 
 
@@ -100,10 +108,14 @@ def test_serve_cli_flags_exist():
     for flag in ("--prefill-chunk", "--spec-k", "--spec-cap",
                  "--quantization", "--quant-group",
                  "--arrival-rate", "--kv-pages", "--kv-page-size",
-                 "--prefetch"):
+                 "--prefetch", "--trace-out", "--metrics-port"):
         assert flag in serve_src, flag
     makefile = _read("Makefile")
     assert "--prefill-chunk" in makefile          # smoke-prefill really uses it
     assert "--quantization int4" in makefile      # smoke-int4 really uses it
     assert "--arrival-rate" in makefile           # smoke-serve-cb really uses it
     assert "--prefetch" in makefile               # smoke-prefetch really uses it
+    assert "--trace-out" in makefile              # smoke-trace really uses it
+    assert "--metrics-port" in makefile           # smoke-trace scrapes it
+    assert "repro.obs" in makefile                # the auditor runs on the artifact
+    assert "trace_view.py" in makefile            # the top-N span table prints

@@ -1,0 +1,70 @@
+"""Print the top-N slowest spans of a captured Chrome trace.
+
+Usage: python tools/trace_view.py TRACE.json [--top N] [--track NAME]
+
+Quick terminal triage for the traces ``serve.py --trace-out`` and the
+benchmark drivers write: which launches/pulls/rotations dominated the run,
+without opening Perfetto. One row per complete ("X") event, sorted by
+duration; ``--track`` filters to one machine track (launch / pull /
+rotation / prefetch / kv_pool) or the per-request lanes (request).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Any, Dict, List
+
+
+def slowest_spans(events: List[Dict[str, Any]], top: int,
+                  track: str = "") -> List[Dict[str, Any]]:
+    spans = [
+        e for e in events
+        if e.get("ph") == "X" and (not track or e.get("cat") == track)
+    ]
+    spans.sort(key=lambda e: -float(e.get("dur", 0.0)))
+    return spans[:top]
+
+
+def format_table(spans: List[Dict[str, Any]]) -> str:
+    header = (f"{'dur_ms':>10} {'ts_ms':>12} {'track':>9} {'unit':>5} "
+              f"{'lane':>5}  name")
+    lines = [header]
+    for e in spans:
+        args = e.get("args") or {}
+        unit = args.get("unit", "")
+        lane = e["tid"] if e.get("pid") == 2 else ""
+        extra = {k: v for k, v in args.items()
+                 if k != "unit" and not isinstance(v, (list, dict))}
+        tail = f"  {extra}" if extra else ""
+        lines.append(
+            f"{float(e.get('dur', 0.0)) / 1e3:>10.3f} "
+            f"{float(e.get('ts', 0.0)) / 1e3:>12.3f} "
+            f"{e.get('cat', ''):>9} {unit!s:>5} {lane!s:>5}  "
+            f"{e.get('name', '')}{tail}"
+        )
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("trace", help="Chrome trace-event JSON file")
+    ap.add_argument("--top", type=int, default=15,
+                    help="number of spans to show (default 15)")
+    ap.add_argument("--track", default="",
+                    help="filter to one track (launch/pull/rotation/"
+                         "prefetch/kv_pool/request)")
+    args = ap.parse_args(argv)
+    with open(args.trace) as f:
+        data = json.load(f)
+    events = data["traceEvents"] if isinstance(data, dict) else data
+    spans = slowest_spans(events, args.top, args.track)
+    n_spans = sum(1 for e in events if e.get("ph") == "X")
+    print(f"{args.trace}: {len(events)} events, {n_spans} spans"
+          + (f" (track={args.track})" if args.track else ""))
+    print(format_table(spans))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
