@@ -3,7 +3,7 @@ PYTHON ?= python
 SHELL := /bin/bash
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: dev-deps tier1 ci bench bench-decode smoke-int4 smoke-prefill smoke-serve-cb smoke-prefetch smoke-trace
+.PHONY: dev-deps tier1 ci bench bench-decode smoke-int4 smoke-prefill smoke-serve-cb smoke-prefetch smoke-trace smoke-sample
 
 dev-deps:          ## install test-only deps (hypothesis property coverage)
 	$(PYTHON) -m pip install -r requirements-dev.txt
@@ -56,7 +56,27 @@ smoke-trace:       ## observability smoke: traced rotary+prefetch serve writes
 	  --trace-out .smoke_trace_cb.json --metrics-port 9109
 	$(PYTHON) -m repro.obs .smoke_trace_cb.json
 
-ci: dev-deps tier1 smoke-int4 smoke-prefill smoke-serve-cb smoke-prefetch smoke-trace ## "green" in one command: dev deps + tier-1 + int4, prefill, CB-serve, prefetch & trace smokes
+smoke-sample:      ## sampled-serving smoke: temperature-0.8 rotary serve with
+                   ## spec windows on int4 slots, run TWICE with the same
+                   ## seeds — asserts the accept-rate telemetry is on record
+                   ## and the seeded token streams reproduce bitwise
+	$(PYTHON) -m repro.launch.serve --arch qwen2-moe-a2.7b --engine rotary \
+	  --residency rotary --quantization int4 --batch 2 --requests 2 \
+	  --prompt-len 8 --max-new 6 --spec-k 4 --cache-len 64 \
+	  --temperature 0.8 --top-k 20 --top-p 0.95 --sample-seed 7 \
+	  | tee .smoke_sample_a.log
+	$(PYTHON) -m repro.launch.serve --arch qwen2-moe-a2.7b --engine rotary \
+	  --residency rotary --quantization int4 --batch 2 --requests 2 \
+	  --prompt-len 8 --max-new 6 --spec-k 4 --cache-len 64 \
+	  --temperature 0.8 --top-k 20 --top-p 0.95 --sample-seed 7 \
+	  > .smoke_sample_b.log
+	grep -q "accept_rate" .smoke_sample_a.log
+	grep -q "spec_windows" .smoke_sample_a.log
+	grep "^req " .smoke_sample_a.log > .smoke_sample_a.req
+	grep "^req " .smoke_sample_b.log > .smoke_sample_b.req
+	cmp .smoke_sample_a.req .smoke_sample_b.req
+
+ci: dev-deps tier1 smoke-int4 smoke-prefill smoke-serve-cb smoke-prefetch smoke-trace smoke-sample ## "green" in one command: dev deps + tier-1 + int4, prefill, CB-serve, prefetch, trace & sampled smokes
 
 bench:             ## all paper-table / kernel / hot-path benchmarks (emits BENCH_decode.json)
 	$(PYTHON) -m benchmarks.run

@@ -20,7 +20,12 @@ reduced config:
   fused / spec-4 rows with double-buffered slot planes — predicted uploads
   ship into a shadow generation while the live window computes, the boundary
   is a pointer flip plus a correction pass, and misses re-launch the ONE
-  compiled step instead of paying the per-layer suffix replay.
+  compiled step instead of paying the per-layer suffix replay;
+* ``*_t`` — sampled row family (temperature 0.8, top-k 20, top-p 0.95): the
+  fused single-token and spec-4 paths re-run drawing from the warped
+  distribution with position-keyed PRNG streams and stochastic speculative
+  acceptance — same compiled window family, exactness now distributional
+  (and bitwise between the two rows, which share one seeded stream).
 
 Acceptance checks: (a) greedy tokens IDENTICAL across all paths under every
 residency mode (misses replay-corrected exactly; spec windows roll back +
@@ -37,7 +42,11 @@ and int4 alike (host corrections run against the dequantized weights) — and
 the int4 store moves <= 0.30x the f16 bytes per rotated expert,
 (g) every prefetch row is bit-identical to its synchronous twin and the
 miss-starved fused rotary row runs >= 1.5x faster with prefetch enabled,
-with ``overlap_ms > 0`` recorded (uploads genuinely hid under compute).
+with ``overlap_ms > 0`` recorded (uploads genuinely hid under compute),
+(h) the sampled ``*_t`` rows emit bitwise-identical tokens (spec-4 sampled
+== single-token sampled) with accept_rate on record, and sampled spec-4
+beats sampled single-token >= 1.4x miss-free (the window also amortizes
+the per-token host draw sync).
 
 Run directly (``python -m benchmarks.decode_hot_path [--spec-k 2,4,8]
 [--quantization int8,int4]``) or via ``python -m benchmarks.run`` /
@@ -60,7 +69,8 @@ PATHS = ("seed", "layer", "fused")
 
 def _run_engine(cfg, params, mode: str, slots: int, path: str,
                 prompt: np.ndarray, steps: int,
-                quant: str | None = None, prefetch: bool = False) -> Dict:
+                quant: str | None = None, prefetch: bool = False,
+                sampler=None) -> Dict:
     from repro.config import ResidencyConfig
     from repro.core import RotaryEngine
     from repro.models.transformer import Runtime
@@ -80,7 +90,7 @@ def _run_engine(cfg, params, mode: str, slots: int, path: str,
         assert eng._fused_decode, "fused path unexpectedly unavailable"
     # warmup: populate the jit caches so the timed loop measures steady state
     logits = eng.prefill(prompt)
-    eng.decode(logits, 2)
+    eng.decode(logits, 2, sampler=sampler)
     pulls0 = eng.stats.sync_pulls
     disp0 = eng.stats.device_dispatches
     bytes0 = eng.stats.bytes_uploaded
@@ -90,7 +100,7 @@ def _run_engine(cfg, params, mode: str, slots: int, path: str,
     outs, walls = [], []
     for _ in range(3):
         t0 = time.perf_counter()
-        outs.append(eng.decode(eng.last_logits, steps))
+        outs.append(eng.decode(eng.last_logits, steps, sampler=sampler))
         walls.append(time.perf_counter() - t0)
     timed = 3 * steps
     return {
@@ -245,6 +255,30 @@ def run(steps: int = 16, spec_ks: Sequence[int] = (2, 4, 8),
     assert spf.overlap_ms > 0
     assert spf.relaunched_steps > 0
 
+    # ---- sampled (temperature > 0) row family: the *_t rows ---------------
+    # single-token sampled vs spec-4 sampled on the prefetch-covered regime:
+    # both draft on-device from the warped distribution with position-keyed
+    # draws, so the streams are bitwise-identical and the window's win is
+    # pure launch/pull amortization (plus skipping the per-token host draw)
+    from repro.serving.sampler import SamplerConfig
+
+    smp = SamplerConfig(temperature=0.8, top_k=20, top_p=0.95, seed=11)
+    for label, path in (("fused_rotary_hi_t", "fused"),
+                        ("spec4_rotary_hi_t", "spec4")):
+        rows[label] = _run_engine(
+            cfg, params, "rotary", e, path, prompt, steps, sampler=smp
+        )
+    # (h) sampled spec-4 == sampled single-token bitwise (same seeded draws,
+    # stochastic acceptance over identical draft/verify distributions), and
+    # miss-free self-drafting still accepts everything (ratio exactly 1.0)
+    np.testing.assert_array_equal(
+        rows["fused_rotary_hi_t"]["tokens"], rows["spec4_rotary_hi_t"]["tokens"],
+        err_msg="sampled spec-4 stream diverged from sampled single-token",
+    )
+    st4 = rows["spec4_rotary_hi_t"]["engine"].stats
+    assert st4.misses == 0 and st4.drafted_tokens > 0
+    assert st4.accept_rate >= 1.0, st4.summary()
+
     # the >=1.5x prefetch gate divides two rows the per-row harness timed
     # minutes apart; re-time the pair INTERLEAVED (round-robin, like the
     # prefill family's rounds) so host-load drift cannot land on one side
@@ -268,6 +302,27 @@ def run(steps: int = 16, spec_ks: Sequence[int] = (2, 4, 8),
     )
     for label in pair:
         rows[label]["s_per_step"] = min(walls[label]) / steps
+
+    # the sampled >=1.4x gate gets the same interleaved treatment; both
+    # engines sit at the same cur_len, so the re-time rounds must stay
+    # bitwise-identical too (same position-keyed draws on both sides)
+    gc.collect()
+    pair_t = ("fused_rotary_hi_t", "spec4_rotary_hi_t")
+    walls_t = {label: [] for label in pair_t}
+    outs_t: Dict = {label: [] for label in pair_t}
+    for _ in range(4):
+        for label in pair_t:
+            eng = rows[label]["engine"]
+            t0 = time.perf_counter()
+            outs_t[label].append(eng.decode(eng.last_logits, steps, sampler=smp))
+            walls_t[label].append(time.perf_counter() - t0)
+    np.testing.assert_array_equal(
+        np.concatenate(outs_t[pair_t[0]], axis=1),
+        np.concatenate(outs_t[pair_t[1]], axis=1),
+        err_msg="sampled spec-4 diverged from single-token in re-time rounds",
+    )
+    for label in pair_t:
+        rows[label]["s_per_step"] = min(walls_t[label]) / steps
     return rows
 
 
@@ -556,6 +611,7 @@ def main(argv: Sequence[str] | None = None) -> None:
         order.append("spec4_rotary_pf")
     if "int4" in quants:
         order.append("fused_rotary_pf@int4")
+    order += ["fused_rotary_hi_t", "spec4_rotary_hi_t"]
     for label in order:
         r = rows[label]
         print(f"  {label:22s} {r['s_per_step']*1e3:8.2f} ms/step  "
@@ -605,6 +661,19 @@ def main(argv: Sequence[str] | None = None) -> None:
     print(f"decode_hot_path,accept_rate_spec4_full,"
           f"{rows['spec4_full']['engine'].stats.accept_rate:.3f}")
     print("decode_hot_path,tokens_identical,1")
+    # sampled *_t rows: spec-4 sampled vs single-token sampled, same stream
+    sampled_speedup = (rows["fused_rotary_hi_t"]["s_per_step"]
+                       / rows["spec4_rotary_hi_t"]["s_per_step"])
+    print(f"  sampled (t=0.8) rotary_hi: spec4 vs single-token "
+          f"{sampled_speedup:.2f}x  "
+          f"(accept_rate {rows['spec4_rotary_hi_t']['engine'].stats.accept_rate:.3f}, "
+          f"tokens bitwise-identical)")
+    print(f"decode_hot_path,speedup_spec4_vs_fused_sampled_rotary_hi,"
+          f"{sampled_speedup:.3f}")
+    for label in ("fused_rotary_hi_t", "spec4_rotary_hi_t"):
+        print(f"decode_hot_path,accept_rate_{label},"
+              f"{rows[label]['engine'].stats.accept_rate:.3f}")
+    print("decode_hot_path,sampled_tokens_identical,1")
     if quants:
         # link traffic: the slot-starved rotary workload (the regime that
         # actually rotates every window) priced in each slot format, MB per
@@ -682,6 +751,12 @@ def main(argv: Sequence[str] | None = None) -> None:
         },
     }
     payload["trace"] = trace_rows
+    payload["sampled"] = {
+        "speedup_spec4_vs_fused_rotary_hi": sampled_speedup,
+        "accept_rate_spec4_rotary_hi_t":
+            rows["spec4_rotary_hi_t"]["engine"].stats.accept_rate,
+        "tokens_identical": True,
+    }
     if "int4" in quants:
         payload["int4_bytes_ratio_vs_f16"] = rows["int4_bytes_ratio_vs_f16"]
         payload["int4_tokens_identical"] = True
@@ -744,6 +819,12 @@ def main(argv: Sequence[str] | None = None) -> None:
     worst4 = min(sp["spec4_vs_fused"] for sp in speedups.values())
     assert best4 >= 1.2, speedups
     assert worst4 >= 1.0, speedups
+    # acceptance: sampled spec-4 must beat the sampled single-token fused
+    # path >= 1.4x miss-free — the window amortizes the launch+pull AND the
+    # per-token host draw sync, so its bar is higher than the greedy 1.2x
+    assert sampled_speedup >= 1.4, (
+        f"sampled spec4 only {sampled_speedup:.2f}x single-token sampled"
+    )
     # acceptance: on the miss-starved fused rotary row, asynchronous prefetch
     # (shadow-generation uploads + compiled-step miss relaunch) must beat the
     # synchronous-rotation baseline >= 1.5x, with real overlap on record —

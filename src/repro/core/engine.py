@@ -127,6 +127,8 @@ from repro.core.transfer import CostModel, TransferClock
 from repro.kernels.topk_gate import route_topk
 from repro.models import transformer as tfm
 from repro.models import moe as moe_mod
+from repro.models import sampling as sampling_mod
+from repro.models.sampling import SampleParams
 from repro.models.layers import apply_norm
 from repro.models.transformer import Runtime
 from repro.obs.metrics import MetricsRegistry
@@ -302,8 +304,9 @@ def build_fused_window_step(
     with_demand: bool,
     donate_state: bool = True,
     keep_replay_anchor: bool = True,
+    sample: Optional[SampleParams] = None,
 ) -> Callable:
-    """ONE compiled program running ``k_steps`` greedy self-drafted decode
+    """ONE compiled program running ``k_steps`` self-drafted decode
     positions (the speculative window) — the multi-token sibling of
     :func:`build_fused_decode_step`, shared by ``RotaryEngine`` and
     ``ServingEngine``.
@@ -312,22 +315,27 @@ def build_fused_window_step(
     residency) -> (draft [K, B], last_logits [B, V], new_state, aux)``. The
     window scans :func:`tfm.decode_window`: per-position ``cur_len``, KV state
     DONATED and carried across positions, the next position's token drafted
-    with an on-device argmax, and every position gathering from the SAME
-    residency snapshot (rotation happens at window boundaries). Telemetry
-    comes back with a leading window axis — ``route_*`` as [K, L, T, k] after
-    :func:`concat_route_telemetry`, ``demand_next`` as [K, L, E] — so the
-    caller can commit the accepted prefix and roll back the rest.
+    on-device (argmax, or a categorical draw from the ``sample``-warped
+    distribution keyed per position when ``sample`` is set — the trailing
+    ``rng_keys`` [B, 2] argument threads the per-row base keys), and every
+    position gathering from the SAME residency snapshot (rotation happens at
+    window boundaries). Telemetry comes back with a leading window axis —
+    ``route_*`` as [K, L, T, k] after :func:`concat_route_telemetry`,
+    ``demand_next`` as [K, L, E], and when sampling ``sample_probs``
+    [K, B, V] / ``sample_p`` [K, B] — so the caller can commit the accepted
+    prefix and roll back the rest.
     """
     moe_segs = moe_segments(cfg)
     aux_fn = _demand_aux_fn(moe_segs, with_demand, keep_replay_anchor)
 
     def step(params, routers_next, token, state, cur_len, residency,
-             page_table=None):
+             page_table=None, rng_keys=None):
         return tfm.decode_window(
             cfg, params, token, state, cur_len, rt, k_steps,
             residency=residency,
             aux_fn=lambda aux: aux_fn(aux, routers_next),
             page_table=page_table,
+            sample=sample, rng_keys=rng_keys,
         )
 
     return jax.jit(step, donate_argnums=(3,) if donate_state else ())
@@ -340,14 +348,16 @@ def build_window_fns(
     *,
     with_demand: bool,
     keep_replay_anchor: bool = True,
+    sample: Optional[SampleParams] = None,
 ) -> Tuple[Callable, Callable, Callable]:
-    """The compiled speculative-window triple both engines cache per K:
+    """The compiled speculative-window triple both engines cache per K
+    (and per ``sample`` warp params when sampling):
     (window step, KV snapshot, KV rollback). Rollback donates the state it
     truncates; the snapshot is dispatched BEFORE the donating window, so it
     reads the pre-window buffers."""
     step = build_fused_window_step(
         cfg, rt, k, with_demand=with_demand, donate_state=True,
-        keep_replay_anchor=keep_replay_anchor,
+        keep_replay_anchor=keep_replay_anchor, sample=sample,
     )
     # trailing page_table: the serving engine passes its paged pool + per-row
     # page tables through the same triple; contiguous callers are unchanged
@@ -662,14 +672,19 @@ class RotaryEngine:
                 "segments": tuple(segs_p),
             }
             self._dstate = None          # stacked decode state (built by prefill)
-            # speculative windows: compiled (window, snapshot, rollback) per K
-            self._fused_windows: Dict[int, Tuple[Callable, Callable, Callable]] = {}
+            # speculative windows: compiled (window, snapshot, rollback) per
+            # (K, sample params) — sampled windows draft with on-device draws
+            self._fused_windows: Dict[Any, Tuple[Callable, Callable, Callable]] = {}
             # the snapshot exists to make rollback exact; when misses are
             # impossible (full residency) or never replayed, no window is ever
             # rejected and the pre-window gather is pure overhead
             self._spec_needs_rollback = (
                 rescfg.mode != "full" and rescfg.host_compute_misses
             )
+        # between-window standalone draws (cached per warp params): the SAME
+        # ops/keys as the in-window draw, so sampled streams are bit-identical
+        # whichever path derives a position's token
+        self._sample_fns: Dict[SampleParams, Callable] = {}
         self._warm_start()
 
     # ------------------------------------------------------------------
@@ -1161,27 +1176,35 @@ class RotaryEngine:
     # ------------------------------------------------------------------
     # speculative multi-token decode (ONE compiled window per K tokens)
     # ------------------------------------------------------------------
-    def _window_fns(self, k: int) -> Tuple[Callable, Callable, Callable]:
+    def _window_fns(
+        self, k: int, sample: Optional[SampleParams] = None
+    ) -> Tuple[Callable, Callable, Callable]:
         """Compiled (window step, KV snapshot, KV rollback) triple for window
-        size ``k`` (cached — decode tails may need a smaller final window)."""
-        fns = self._fused_windows.get(k)
+        size ``k`` (cached per (k, sample) — decode tails may need a smaller
+        final window, and sampled windows are a distinct compiled family)."""
+        fns = self._fused_windows.get((k, sample))
         if fns is None:
-            fns = build_window_fns(self.cfg, self.rt, k, with_demand=True)
-            self._fused_windows[k] = fns
+            fns = build_window_fns(
+                self.cfg, self.rt, k, with_demand=True, sample=sample
+            )
+            self._fused_windows[(k, sample)] = fns
         return fns
 
     def _decode_window_fused(
-        self, tok: np.ndarray, k: int
+        self, tok: np.ndarray, k: int,
+        sample: Optional[SampleParams] = None,
+        rng_keys: Optional[jax.Array] = None,
+        sample_rng: Optional[np.random.Generator] = None,
     ) -> Tuple[np.ndarray, np.ndarray, int]:
-        """One speculative window: ``k`` greedy self-drafted positions through
-        ONE compiled program, one queue-draining pull, acceptance by the miss
-        telemetry, KV rollback + suffix replay for the first rejected
-        position, rotation at the window boundary.
+        """One speculative window: ``k`` self-drafted positions through
+        ONE compiled program, one queue-draining pull, acceptance by the
+        accept rule + miss telemetry, KV rollback + suffix replay for the
+        first rejected position, rotation at the window boundary.
 
         ``tok`` [B] is the position-0 token (already emitted by the caller).
         Returns ``(extra [committed-1, B], logits [B, V], committed)``:
         ``extra`` are the drafted tokens that committed beyond ``tok``, and
-        ``logits`` continue the greedy chain (the last committed position's —
+        ``logits`` continue the chain (the last committed position's —
         replay-corrected when that position missed). Exactness: positions
         before the first miss saw exactly the inputs and residency the
         single-token fused path would have used (the window defers rotation
@@ -1189,13 +1212,24 @@ class RotaryEngine:
         own output — only WHERE later steps' compute happens, which the
         replay machinery already corrects), so committed tokens are
         bit-identical to single-token decode.
+
+        With ``sample``/``rng_keys`` the window drafts by on-device
+        position-keyed draws and acceptance runs
+        :func:`repro.serving.sampler.stochastic_accept` over the pulled
+        ``sample_probs`` telemetry. Self-drafting passes the same
+        distributions as p and q, so the stochastic rule accepts every
+        position (its resample path is dormant — a rejected-suffix re-draw
+        happens at the caller's loop top with the SAME position key, which
+        is the exact q-draw) and rejection still comes only from residency
+        misses; sampled committed tokens are bit-identical to single-token
+        sampled decode under the shared PRNG protocol.
         """
         cur_len0 = self.cur_len
         tr = self._tr
         if tr is not None:
             tr.new_unit("window")
         residency = self.manager.stacked_residency()
-        step_fn, snap_fn, roll_fn = self._window_fns(k)
+        step_fn, snap_fn, roll_fn = self._window_fns(k, sample)
         saved = None
         if self._spec_needs_rollback:
             # gather the pre-window contents of the K slots the window will
@@ -1209,16 +1243,20 @@ class RotaryEngine:
         draft_dev, logits_dev, self._dstate, aux = step_fn(
             self._decode_params, self._routers_next, jnp.asarray(tok),
             self._dstate, jnp.int32(cur_len0), residency,
+            rng_keys=rng_keys,
         )
         self.stats.device_dispatches += 1
         self.stats.spec_windows += 1
         if tr is not None:
             tr.complete("launch", "launch", t_trace, time.perf_counter(),
                         args={"cur_len": cur_len0, "k": k})
-        for key in self._pull_keys:
+        pull_keys = self._pull_keys
+        if sample is not None:
+            pull_keys = pull_keys + ["sample_probs", "sample_p"]
+        for key in pull_keys:
             aux[key].copy_to_host_async()
         draft_dev.copy_to_host_async()
-        self.stats.overlapped_pulls += len(self._pull_keys) + 1
+        self.stats.overlapped_pulls += len(pull_keys) + 1
         if self.prefetch:
             # whole window still in flight: shadow-upload the predicted next
             # transition under it (committed at the boundary rotation below)
@@ -1236,14 +1274,20 @@ class RotaryEngine:
         miss = concat_route_telemetry(aux, "miss", self._moe_segs, axis=1)
         demand_next = np.asarray(aux["demand_next"])                # [K, L, E]
         # --- accept rule ------------------------------------------------
-        # greedy self-draft with identical weights: the verification argmaxes
-        # ARE the drafted tokens, so the token-level rule accepts everything
-        # (the call is the plug point for a separate drafter / the stochastic
-        # hook) and rejection comes only from residency misses invalidating a
-        # position and everything drafted after it
-        from repro.serving.sampler import greedy_accept
+        # self-draft with identical weights: greedy verification argmaxes ARE
+        # the drafted tokens, and the stochastic rule sees draft dist ==
+        # verify dist (ratio exactly 1 -> certain acceptance) — so either way
+        # the token-level rule accepts everything (the call is the plug point
+        # for a separate drafter) and rejection comes only from residency
+        # misses invalidating a position and everything drafted after it
+        from repro.serving.sampler import greedy_accept, stochastic_accept
 
-        accept = int(greedy_accept(draft, draft).min())
+        if sample is None:
+            accept = int(greedy_accept(draft, draft).min())
+        else:
+            probs = np.asarray(aux["sample_probs"])             # [K, B, V]
+            s_acc, _ = stochastic_accept(draft, probs, probs, sample_rng)
+            accept = int(s_acc.min())
         miss_steps = miss.reshape(k, -1).any(axis=1)                # [K]
         missed = np.flatnonzero(miss_steps)
         if tr is not None and missed.size:
@@ -1261,10 +1305,19 @@ class RotaryEngine:
             # needed on success). Positions before the first miss recompute
             # bit-identically; the rest become the exact corrected chain —
             # the whole window commits instead of rejecting the suffix.
-            redo = self._relaunch_window(step_fn, tok, cur_len0, k, ids)
+            redo = self._relaunch_window(
+                step_fn, tok, cur_len0, k, ids,
+                sample=sample, rng_keys=rng_keys,
+            )
             if redo is not None:
-                draft, logits, ids, weights, miss, demand_next = redo
-                accept = int(greedy_accept(draft, draft).min())
+                draft, logits, ids, weights, miss, demand_next, probs = redo
+                if sample is None:
+                    accept = int(greedy_accept(draft, draft).min())
+                else:
+                    s_acc, _ = stochastic_accept(
+                        draft, probs, probs, sample_rng
+                    )
+                    accept = int(s_acc.min())
                 j_star = None
         self.stats.drafted_tokens += k
         self.stats.accepted_tokens += accept
@@ -1400,6 +1453,8 @@ class RotaryEngine:
         cur_len0: int,
         k: int,
         ids0: np.ndarray,
+        sample: Optional[SampleParams] = None,
+        rng_keys: Optional[jax.Array] = None,
     ) -> Optional[Tuple[np.ndarray, ...]]:
         """Window-sized miss relaunch: cover each layer's routed-expert union
         across all K positions (None when it exceeds the slot count — spec
@@ -1408,7 +1463,12 @@ class RotaryEngine:
         commits all K tokens; on persistent misses the caller falls back to
         the classic rollback + suffix replay against the ORIGINAL telemetry,
         which stays valid because positions before the first miss recompute
-        bit-identically and the pre-window KV snapshot is untouched."""
+        bit-identically and the pre-window KV snapshot is untouched. Sampled
+        windows relaunch with the SAME ``rng_keys`` — position keys are a
+        pure function of cache position, so the corrected chain re-draws
+        deterministically — and return the relaunched ``sample_probs`` (the
+        trailing tuple slot, None for greedy) for the caller's re-run of the
+        stochastic accept rule."""
         ids_cur = ids0                                     # [K, L, T, kk]
         for _ in range(2):
             # same zero-cost feasibility gate as the single-step relaunch —
@@ -1439,13 +1499,17 @@ class RotaryEngine:
             draft_dev, logits_dev, self._dstate, aux = step_fn(
                 self._decode_params, self._routers_next, jnp.asarray(tok),
                 self._dstate, jnp.int32(cur_len0), residency,
+                rng_keys=rng_keys,
             )
             self.stats.device_dispatches += 1
             self.stats.relaunched_steps += 1
             if tr is not None:
                 tr.complete("launch", "launch", t_trace, time.perf_counter(),
                             args={"kind": "relaunch"})
-            for key in self._pull_keys:
+            pull_keys = self._pull_keys
+            if sample is not None:
+                pull_keys = pull_keys + ["sample_probs", "sample_p"]
+            for key in pull_keys:
                 aux[key].copy_to_host_async()
             draft_dev.copy_to_host_async()
             if tr is not None:
@@ -1461,7 +1525,11 @@ class RotaryEngine:
             miss = concat_route_telemetry(aux, "miss", self._moe_segs, axis=1)
             demand_next = np.asarray(aux["demand_next"])
             if not miss.any():
-                return draft, logits, ids, weights, miss, demand_next
+                probs = (
+                    np.asarray(aux["sample_probs"]) if sample is not None
+                    else None
+                )
+                return draft, logits, ids, weights, miss, demand_next, probs
             ids_cur = ids
         return None
 
@@ -1880,37 +1948,62 @@ class RotaryEngine:
         *,
         greedy: bool = True,
         seed: int = 0,
+        sampler: Optional[Any] = None,
     ) -> np.ndarray:
         """Generate ``steps`` tokens. Returns [B, steps].
 
-        With ``spec_k > 1`` greedy decode advances in speculative windows:
-        each window emits up to ``spec_k`` tokens from ONE compiled program
-        launch and one queue-draining pull (bit-identical to single-token
-        decode — rejected positions are rolled back and replayed). Sampled
-        decode falls back to single-token steps (greedy accept rule only for
-        now; the stochastic hook lives in ``repro.serving.sampler``).
+        With ``spec_k > 1`` decode advances in speculative windows: each
+        window emits up to ``spec_k`` tokens from ONE compiled program launch
+        and one queue-draining pull (bit-identical to single-token decode —
+        rejected positions are rolled back and replayed). This holds for
+        SAMPLED decode too: pass ``sampler`` (a
+        ``repro.serving.sampler.SamplerConfig``) or ``greedy=False`` (plain
+        temperature-1.0 sampling seeded by ``seed``) and the fused path
+        drafts on-device from the warped distribution with position-keyed
+        draws, accepting via the stochastic rule — sampled fused decode
+        always runs the scanned window family (size-1 windows when
+        ``spec_k == 1``), so the spec-K and single-token streams are the
+        same compiled program at different trip counts and match bitwise.
         """
-        from repro.core.predictor import softmax as np_softmax
-
-        rng = np.random.default_rng(seed)
         out = np.zeros((self.batch, steps), np.int32)
         logits = last_logits
-        spec = self._fused_decode and self.spec_k > 1 and greedy
+        if sampler is None and not greedy:
+            from repro.serving.sampler import SamplerConfig
+
+            sampler = SamplerConfig(temperature=1.0, seed=seed)
+        sampled = sampler is not None and sampler.temperature > 0.0
+        sp = base_keys = sample_fn = sample_rng = None
+        if sampled:
+            sp = SampleParams(
+                float(sampler.temperature), int(sampler.top_k),
+                float(sampler.top_p),
+            )
+            base_keys = sampling_mod.row_keys(sampler.seed, self.batch)
+            sample_fn = self._sample_fns.get(sp)
+            if sample_fn is None:
+                sample_fn = sampling_mod.build_sample_fn(sp)
+                self._sample_fns[sp] = sample_fn
+            sample_rng = np.random.default_rng(sampler.seed)
+        spec = self._fused_decode and self.spec_k > 1
         t0 = time.perf_counter()
         i = 0
         while i < steps:
-            if greedy:
-                tok = np.argmax(logits, axis=-1).astype(np.int32)
+            if sampled:
+                tok = np.asarray(sample_fn(
+                    jnp.asarray(logits), base_keys,
+                    jnp.int32(self.cur_len - 1),
+                ))
+                self.stats.sync_pulls += 1
             else:
-                p = np_softmax(logits.astype(np.float64), axis=-1)
-                tok = np.array(
-                    [rng.choice(p.shape[-1], p=row) for row in p], np.int32
-                )
+                tok = np.argmax(logits, axis=-1).astype(np.int32)
             out[:, i] = tok
             t_win = time.perf_counter()
             k = min(self.spec_k, steps - i) if spec else 1
-            if k > 1:
-                extra, logits, committed = self._decode_window_fused(tok, k)
+            if k > 1 or (sampled and self._fused_decode):
+                extra, logits, committed = self._decode_window_fused(
+                    tok, k, sample=sp, rng_keys=base_keys,
+                    sample_rng=sample_rng,
+                )
                 if committed > 1:
                     out[:, i + 1 : i + committed] = extra.T
                 advanced = committed

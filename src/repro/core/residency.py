@@ -857,6 +857,13 @@ class RotaryResidencyManager:
         and is recorded THEN, never twice, and routing computed from wrong
         drafted inputs never pollutes prediction. (The rotary engine commits
         batch-uniformly and pre-slices instead, leaving ``accepted=None``.)
+
+        Sampled decode keeps the same commit discipline on its PRNG streams:
+        a draw's key is ``fold_in(row_key, position)``, so a rejected
+        position re-draws with the SAME key when it re-decodes — the stream
+        commits like residency, per accepted position, and the emitted
+        tokens depend only on (seed, position), never on window boundaries
+        or batch composition.
         """
         n = len(self.policies)
         if accepted is not None:

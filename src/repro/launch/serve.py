@@ -92,7 +92,22 @@ def main() -> None:
                     help="serve live Prometheus metrics on "
                          "127.0.0.1:PORT/metrics while the run is in flight "
                          "(0 = off; batch engine only)")
-    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature (0 = greedy argmax; > 0 draws "
+                         "from the warped distribution through the SAME "
+                         "speculative windows, kept exact by stochastic "
+                         "acceptance)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="keep only the k highest logits before sampling "
+                         "(0 = no top-k cut)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus sampling: keep the smallest prefix of "
+                         "probability mass >= p (1.0 = no cut)")
+    ap.add_argument("--sample-seed", type=int, default=None,
+                    help="PRNG seed for the sampling streams (default: "
+                         "--seed). Streams are keyed per request/position, "
+                         "so a fixed seed reproduces tokens bitwise across "
+                         "runs regardless of batching")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -135,6 +150,14 @@ def main() -> None:
             prefetch=args.prefetch,
             trace=tracer,
         )
+        gen_kw = {}
+        if args.temperature > 0:
+            gen_kw = dict(greedy=False, sampler=SamplerConfig(
+                temperature=args.temperature, top_k=args.top_k,
+                top_p=args.top_p,
+                seed=args.sample_seed if args.sample_seed is not None
+                else args.seed,
+            ))
         # serve requests in decode groups of --batch (device-resident hot path
         # amortizes the per-step host interaction over all rows of the group)
         for g0 in range(0, args.requests, b):
@@ -142,7 +165,7 @@ def main() -> None:
             prompt = rng.integers(
                 0, cfg.vocab_size, (b, args.prompt_len)
             ).astype(np.int32)
-            out = eng.generate(prompt, args.max_new)
+            out = eng.generate(prompt, args.max_new, **gen_kw)
             for i in range(n):
                 print(f"req {g0 + i}: {out[i].tolist()}")
         print("stats:", eng.stats.summary())
@@ -155,7 +178,11 @@ def main() -> None:
 
     eng = ServingEngine(
         cfg, params, rt=rt, num_slots=args.batch_slots, residency=rescfg,
-        sampler=SamplerConfig(temperature=args.temperature, seed=args.seed),
+        sampler=SamplerConfig(
+            temperature=args.temperature, top_k=args.top_k, top_p=args.top_p,
+            seed=args.sample_seed if args.sample_seed is not None
+            else args.seed,
+        ),
         spec_cap=max(1, args.spec_cap),
         kv_page_size=args.kv_page_size,
         kv_pages=args.kv_pages or None,

@@ -1,0 +1,125 @@
+"""On-device sampling primitives for temperature > 0 decode.
+
+The speculative window (:func:`repro.models.transformer.decode_window`) and the
+engines' between-window draws share EXACTLY these functions, so a token drawn
+inside a K-position window is bit-identical to the same token drawn by a
+size-1 window or by the host-side standalone sampler — the property the
+seeded-stream-equivalence tests pin.
+
+PRNG protocol (stateless, position-keyed)
+-----------------------------------------
+Every draw is keyed by ``fold_in(row_key, n)`` where ``n`` is the CACHE
+position whose logits are being sampled (the ``cur_len`` the decode step ran
+at). Nothing is consumed from a sequential stream, so:
+
+* spec-K and single-token decode use identical keys per position — full
+  acceptance (self-drafting: draft dist == verify dist) yields bit-identical
+  token streams;
+* a REJECTED position (residency miss truncation) re-draws with the SAME key
+  when it is re-decoded — PRNG state "commits" exactly like residency does:
+  only accepted positions advance anything, and replay/relaunch/CB-rejoin all
+  reproduce the draw;
+* a serving request's stream depends only on (its seed, its own lengths), not
+  on batch composition — the same request samples the same tokens alone or
+  mid-flight in a continuous-batching window.
+
+``SampleParams`` is a hashable static: jitted programs specialize per
+(temperature, top_k, top_p), mirroring how they specialize per window size.
+Logit warping matches the host reference (:class:`repro.serving.sampler
+.Sampler`) bitwise-on-support: top-k keeps the ``lax.top_k`` candidates (ties
+broken toward lower index), top-p sorts descending with a STABLE sort and
+keeps tokens while the cumulative mass before them is < p.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class SampleParams(NamedTuple):
+    """Static warp parameters (hashable — keys jit caches)."""
+    temperature: float = 1.0
+    top_k: int = 0                  # 0 = off
+    top_p: float = 1.0
+
+
+def row_keys(seed: int, rows: int) -> jnp.ndarray:
+    """[rows, 2] uint32 base keys: one independent stream per batch row."""
+    base = jax.random.PRNGKey(seed)
+    return jax.vmap(lambda r: jax.random.fold_in(base, r))(
+        jnp.arange(rows, dtype=jnp.int32)
+    )
+
+
+def request_key(seed: int) -> jnp.ndarray:
+    """[2] uint32 base key for one serving request (batch-independent)."""
+    return jax.random.PRNGKey(seed)
+
+
+def warp_probs(logits: jax.Array, sp: SampleParams) -> jax.Array:
+    """Temperature / top-k / top-p warped probabilities, [B, V] f32.
+
+    Off-support entries are exactly 0. Matches the host ``Sampler`` kept set:
+    top-k via ``lax.top_k`` (lowest index wins ties), top-p via a stable
+    descending sort keeping tokens with ``cum - p < top_p``.
+    """
+    x = logits.astype(jnp.float32) / sp.temperature
+    v = x.shape[-1]
+    if 0 < sp.top_k < v:
+        _, idx = jax.lax.top_k(x, sp.top_k)                     # [B, k]
+        keep = jnp.zeros(x.shape, bool)
+        keep = jnp.put_along_axis(keep, idx, True, axis=-1, inplace=False)
+        x = jnp.where(keep, x, -jnp.inf)
+    p = jax.nn.softmax(x, axis=-1)
+    if sp.top_p < 1.0:
+        order = jnp.argsort(-p, axis=-1, stable=True)
+        sp_sorted = jnp.take_along_axis(p, order, axis=-1)
+        cum = jnp.cumsum(sp_sorted, axis=-1)
+        keep_sorted = cum - sp_sorted < sp.top_p                # head always kept
+        keep = jnp.zeros(p.shape, bool)
+        keep = jnp.put_along_axis(keep, order, keep_sorted, axis=-1,
+                                  inplace=False)
+        p = jnp.where(keep, p, 0.0)
+        p = p / p.sum(axis=-1, keepdims=True)
+    return p
+
+
+def position_keys(keys: jax.Array, pos: jax.Array) -> jax.Array:
+    """Per-row draw keys: ``fold_in(row_key, pos_row)``.
+
+    ``keys`` [B, 2] uint32 base keys; ``pos`` scalar or [B] int32 cache
+    positions (broadcast per row).
+    """
+    b = keys.shape[0]
+    pos_b = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    return jax.vmap(jax.random.fold_in)(keys, pos_b)
+
+
+def draw(keys: jax.Array, probs: jax.Array) -> jax.Array:
+    """One categorical token per row from warped ``probs`` [B, V] with
+    per-row ``keys`` [B, 2] (Gumbel-max via ``jax.random.categorical``).
+    Zero-probability tokens can never be drawn (log 0 = -inf)."""
+    logp = jnp.where(probs > 0, jnp.log(probs), -jnp.inf)
+    return jax.vmap(jax.random.categorical)(keys, logp).astype(jnp.int32)
+
+
+def sample_step(logits: jax.Array, keys: jax.Array, pos: jax.Array,
+                sp: SampleParams):
+    """warp + fold + draw for one position: the shared in-window / standalone
+    draw. Returns ``(tokens [B], probs [B, V], tok_probs [B])``."""
+    p = warp_probs(logits, sp)
+    nxt = draw(position_keys(keys, pos), p)
+    p_tok = jnp.take_along_axis(p, nxt[:, None], axis=-1)[:, 0]
+    return nxt, p, p_tok
+
+
+def build_sample_fn(sp: SampleParams):
+    """Jitted standalone ``fn(logits [B, V], keys [B, 2], pos) -> tokens [B]``
+    — the engines' between-window draw, bit-identical to the in-window one
+    (same ops, same key derivation)."""
+    def fn(logits, keys, pos):
+        return sample_step(logits, keys, pos, sp)[0]
+
+    return jax.jit(fn)

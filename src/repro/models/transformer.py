@@ -22,6 +22,7 @@ from repro.compat import get_abstract_mesh, manual_axis_names, shard_map
 from repro.config.base import ModelConfig, ShardingConfig
 from repro.models import attention as attn
 from repro.models import moe as moe_mod
+from repro.models import sampling as sampling_mod
 from repro.models import rglru as rglru_mod
 from repro.models import xlstm as xlstm_mod
 from repro.models.layers import (
@@ -719,19 +720,30 @@ def decode_window(
     residency: Optional[Any] = None,
     aux_fn: Optional[Any] = None,
     page_table: Optional[jax.Array] = None,
+    sample: Optional[sampling_mod.SampleParams] = None,
+    rng_keys: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, jax.Array, Any, Aux]:
-    """``k_steps`` greedy self-drafted decode steps in ONE traced program.
+    """``k_steps`` self-drafted decode steps in ONE traced program.
 
     A ``lax.scan`` over :func:`decode_model` threads (token, state, cur_len)
     through the window: each position runs the whole stack at its own
     ``cur_len`` (scalar engine or per-row [B] serving batches) and drafts the
-    next token with an on-device argmax — the self-drafting half of the
-    speculative decode path. The residency pytree is a scan constant, so every
-    window position gathers from the SAME residency snapshot (rotation is the
-    caller's job, at window boundaries).
+    next token on-device — the self-drafting half of the speculative decode
+    path. The residency pytree is a scan constant, so every window position
+    gathers from the SAME residency snapshot (rotation is the caller's job, at
+    window boundaries).
+
+    Drafting is a plain argmax by default. With ``sample`` (a static
+    :class:`repro.models.sampling.SampleParams`) and ``rng_keys`` ([B, 2]
+    uint32 per-row base keys), position j instead draws from the warped
+    distribution keyed by ``fold_in(row_key, cur_len_at_j)`` — the stateless
+    position-keyed protocol that makes spec-K streams bit-identical to
+    single-token ones — and the stacked aux gains ``sample_probs`` [K, B, V]
+    (the warped per-position distributions, draft AND verifier for a
+    self-drafting window) plus ``sample_p`` [K, B] (the drawn token's prob).
 
     Returns ``(draft [K, B], last_logits [B, V] f32, new_state, aux)`` where
-    ``draft[j]`` is the argmax of position j's logits (the token position j+1
+    ``draft[j]`` is drafted from position j's logits (the token position j+1
     consumed) and every aux entry is stacked with a leading window axis [K, ...].
     ``aux_fn`` (optional) post-processes each position's aux dict before
     stacking (the engine's on-device demand GEMM). Logits are carried in f32 —
@@ -750,7 +762,15 @@ def decode_window(
         )
         if aux_fn is not None:
             aux = aux_fn(aux)
-        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        if sample is None:
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        else:
+            nxt, probs, p_tok = sampling_mod.sample_step(
+                logits, rng_keys, cl, sample
+            )
+            aux = dict(aux)
+            aux["sample_probs"] = probs
+            aux["sample_p"] = p_tok
         return (nxt, st, cl + 1, logits.astype(jnp.float32)), (nxt, aux)
 
     init = (

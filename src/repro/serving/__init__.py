@@ -14,9 +14,12 @@ Recurrent stacks (and ``paged=False``) keep the legacy group-tick batch.
 reservations, deadline feasibility from learned prefill/decode rates,
 power-of-two prefill buckets), the per-request lifecycle timestamps behind
 the TTFT / inter-token-latency percentiles, and the per-row
-speculative-length policy. ``Sampler`` is host-side numpy (keeps the
-compiled step deterministic and donation-friendly) and carries the
-speculative ACCEPT rules.
+speculative-length policy. ``Sampler`` carries the speculative ACCEPT
+rules (``greedy_accept``, ``stochastic_accept``) plus the host reference
+warp/draw; at temperature > 0 the engine drafts ON DEVICE from the warped
+distribution (``repro.models.sampling``) with per-request position-keyed
+PRNG streams, and the host rule accepts/resamples per row — a request's
+tokens depend only on its seed and lengths, never on batch composition.
 
 Exactness contract: throughput serving drops missed experts in-step
 (counted, rotation corrects the NEXT step) — it trades the rotary engine's

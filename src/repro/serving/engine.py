@@ -61,11 +61,13 @@ from repro.core.predictor import DemandPredictor
 from repro.core.residency import RotaryResidencyManager
 from repro.core.stats import EngineStats
 from repro.models import transformer as tfm
+from repro.models import sampling as sampling_mod
+from repro.models.sampling import SampleParams
 from repro.models.transformer import Runtime
 from repro.obs.metrics import MetricsRegistry
 from repro.obs.tracer import resolve_tracer
 from repro.serving.kv_pool import KVPagePool
-from repro.serving.sampler import Sampler, SamplerConfig
+from repro.serving.sampler import Sampler, SamplerConfig, stochastic_accept
 from repro.serving.scheduler import Request, Scheduler
 
 _KV_ONLY_KINDS = ("attn_mlp", "attn_moe", "local_attn")
@@ -146,11 +148,27 @@ class ServingEngine:
                 f"archs keep the group-tick path ({cfg.layer_kinds})"
             )
         self._paged = paged
+        # sampled (temperature > 0) serving draws on-device with per-request
+        # position-keyed PRNG streams (repro.models.sampling) on the paged
+        # path; the group-tick path keeps the host Sampler
+        self._sampled = self.sampler.cfg.temperature > 0.0
+        self._sample_params = None
+        self._sample_fn = None
+        self._accept_rng = None
+        self._req_keys: Dict[int, np.ndarray] = {}   # uid -> [2] uint32 base key
+        if self._sampled:
+            c = self.sampler.cfg
+            self._sample_params = SampleParams(
+                float(c.temperature), int(c.top_k), float(c.top_p)
+            )
+            self._sample_fn = sampling_mod.build_sample_fn(self._sample_params)
+            self._accept_rng = np.random.default_rng(c.seed)
         # speculative windows need KV-only state (rollback restores cache
-        # slots; a recurrent update is destructive) and greedy drafting (the
-        # stochastic accept rule is still a hook — see repro.serving.sampler)
+        # slots; a recurrent update is destructive). Sampled speculation runs
+        # the stochastic accept rule over the window's sample_probs telemetry
+        # — paged path only (the group tick draws through the host Sampler)
         self._spec_ok = (
-            spec_cap > 1 and kv_only and self.sampler.cfg.temperature <= 0.0
+            spec_cap > 1 and kv_only and (not self._sampled or paged)
         )
         from repro.models import attention as attn_mod
 
@@ -279,18 +297,31 @@ class ServingEngine:
     def _window_fns(self, k: int):
         """Compiled (window step, KV snapshot, KV rollback) for window size
         ``k`` — the rotary engine's speculative triple, minus the replay path
-        (so the window drops the ``route_x`` anchors). Paged mode keys its
-        whole compile cache here: (K, rows bucket) geometry, never live-row
-        count."""
+        (so the window drops the ``route_x`` anchors). Sampled engines bake
+        their warp params into the window (drafting becomes an on-device
+        position-keyed draw). Paged mode keys its whole compile cache here:
+        (K, rows bucket) geometry, never live-row count."""
         fns = self._window_cache.get(k)
         if fns is None:
             fns = build_window_fns(
                 self.cfg, self.rt, k,
                 with_demand=self.res_mgr is not None,
                 keep_replay_anchor=False,
+                sample=self._sample_params,
             )
             self._window_cache[k] = fns
         return fns
+
+    def _request_key(self, req: Request) -> np.ndarray:
+        """[2] uint32 PRNG base key for one request — a pure function of the
+        request's seed (uid/slot/batch-independent), so its sampled stream is
+        identical alone, mid-CB-window, or across prefetch relaunches."""
+        key = self._req_keys.get(req.uid)
+        if key is None:
+            seed = req.seed if req.seed is not None else self.sampler.cfg.seed
+            key = np.asarray(sampling_mod.request_key(int(seed)))
+            self._req_keys[req.uid] = key
+        return key
 
     # ------------------------------------------------------------------
     def _prefill_one(self, prompt: np.ndarray) -> Any:
@@ -449,6 +480,7 @@ class ServingEngine:
                             lane=req.uid, args={"tokens": len(req.output)})
             tr.instant("finish", "request", lane=req.uid,
                        args={"tokens": len(req.output)})
+        self._req_keys.pop(req.uid, None)
         if self.pool is not None:
             self.stats.kv_pages_released += self.pool.release(req.uid)
 
@@ -561,7 +593,10 @@ class ServingEngine:
 
     # ------------------------------------------------------------------
     def submit(self, prompt: np.ndarray, max_new: int,
-               deadline_s: Optional[float] = None) -> Request:
+               deadline_s: Optional[float] = None,
+               seed: Optional[int] = None) -> Request:
+        """``seed`` fixes this request's sampled PRNG stream (defaults to the
+        engine sampler's seed); greedy engines ignore it."""
         prompt = np.asarray(prompt, np.int32)
         if self.pool is not None and len(prompt) > self.rt.cache_len:
             # up-front pool-capacity validation: this request could NEVER be
@@ -573,7 +608,7 @@ class ServingEngine:
                 f"positions at full residency)"
             )
         return self.scheduler.submit(
-            prompt, max_new, time.perf_counter(), deadline_s
+            prompt, max_new, time.perf_counter(), deadline_s, seed=seed
         )
 
     def run(self, max_ticks: int = 10_000) -> List[Request]:
@@ -609,7 +644,17 @@ class ServingEngine:
             else:
                 self._splice_row(req.slot, row_state)
             self.lengths[req.slot] = len(req.prompt)
-            tok = int(self.sampler(np.asarray(logits))[0])
+            if self._sampled and self._paged:
+                # per-request position-keyed device draw: the first token is
+                # keyed at the last PROMPT position, so it is identical
+                # whenever/wherever this request is admitted
+                tok = int(np.asarray(self._sample_fn(
+                    jnp.asarray(np.asarray(logits).reshape(1, -1)),
+                    jnp.asarray(self._request_key(req))[None, :],
+                    jnp.int32(len(req.prompt) - 1),
+                ))[0])
+            else:
+                tok = int(self.sampler(np.asarray(logits))[0])
             self.next_token[req.slot] = tok
             self.active[req.slot] = True
             self.stats.tokens += len(req.prompt)
@@ -685,10 +730,20 @@ class ServingEngine:
         pt = np.zeros((rows, self.pool.row_pages), np.int32)
         tok = np.zeros((rows,), np.int32)
         lens = np.zeros((rows,), np.int32)
+        keys = None
+        if self._sampled:
+            keys_np = np.zeros((rows, 2), np.uint32)
         for i, s in enumerate(live):
             pt[i] = self.pool.table_array(sch.running[s].uid)
             tok[i] = self.next_token[s]
             lens[i] = self.lengths[s]
+            if self._sampled:
+                # request-intrinsic base keys: the row's draws depend only on
+                # (its seed, its cache positions), never its slot or the
+                # window's other occupants — CB streams == isolated streams
+                keys_np[i] = self._request_key(sch.running[s])
+        if self._sampled:
+            keys = jnp.asarray(keys_np)
         if tr is not None:
             # every physical page this window will read/write, for the
             # auditor's use-after-release replay
@@ -716,7 +771,7 @@ class ServingEngine:
             t_launch = time.perf_counter()
         draft, last_logits, self.pool_state, aux = step_fn(
             self.params, self._routers_next, jnp.asarray(tok),
-            self.pool_state, lens_j, residency, pt_j,
+            self.pool_state, lens_j, residency, pt_j, rng_keys=keys,
         )
         if tr is not None:
             tr.complete("launch", "launch", t_launch, time.perf_counter(),
@@ -725,6 +780,12 @@ class ServingEngine:
         self.stats.windows += 1
         if k > 1:
             self.stats.spec_windows += 1
+        if self._sampled:
+            # the per-position warped distributions (draft AND verifier for a
+            # self-drafting window) ride the same async channel as the route
+            # telemetry; the stochastic accept rule runs on them below
+            aux["sample_probs"].copy_to_host_async()
+            self.stats.overlapped_pulls += 1
         if self.res_mgr is not None:
             for key, v in aux.items():
                 if key.startswith("route_") or key == "demand_next":
@@ -738,12 +799,10 @@ class ServingEngine:
                 self.res_mgr.begin_prefetch(self.predictor)
         if tr is not None:
             t_pull = time.perf_counter()
-        if self.sampler.cfg.temperature <= 0.0:
-            draft_np = np.asarray(draft)       # [K, rows]: THE queue-draining pull
-        else:
-            # sampled serving runs size-1 windows (spec_ok is false): the
-            # host draws from the window's f32 last-position logits
-            draft_np = self.sampler(np.asarray(last_logits))[None, :]
+        # greedy AND sampled windows draft on-device: [K, rows], THE
+        # queue-draining pull (sampled drafting happened in-graph from the
+        # warped per-position distributions, keyed per request)
+        draft_np = np.asarray(draft)
         if tr is not None:
             tr.complete("pull", "pull", t_pull, time.perf_counter(),
                         args={"rows": len(live), "k": k})
@@ -761,6 +820,26 @@ class ServingEngine:
                 tr.instant("miss", "launch", args={
                     "rows": int(any_miss[: len(live)].sum()), "k": k,
                 })
+        if self._sampled:
+            # stochastic accept over the pulled distributions. Self-drafting
+            # passes the SAME array as p and q (ratio exactly 1), so the rule
+            # accepts every position and the resample swap below is dormant —
+            # it is the live plug point for a real p != q drafter, and it
+            # composes with the miss cap by per-row min (a miss below the
+            # first stochastic rejection wins, and then the swapped token is
+            # never fed)
+            probs = np.asarray(aux["sample_probs"])         # [K, rows, V]
+            s_acc, resampled = stochastic_accept(
+                draft_np, probs, probs, self._accept_rng
+            )
+            stoch = np.where(s_acc < k, s_acc + 1, k).astype(np.int32)
+            rej = np.flatnonzero(s_acc < k)
+            if rej.size:
+                draft_np = draft_np.copy()      # device pull may be read-only
+                draft_np[s_acc[rej], rej] = resampled[rej]
+            accepted[: len(live)] = np.minimum(
+                accepted[: len(live)], stoch[: len(live)]
+            )
         # a finishing row commits only what it can still emit; ``offered`` =
         # drafts the row could have used (the accept-rate denominator, so
         # unused tail drafts don't read as rejections)

@@ -28,6 +28,10 @@ class Request:
     max_new: int
     deadline_s: Optional[float] = None # relative to submission
     submitted_at: float = 0.0          # arrival
+    # sampled serving: the request's PRNG stream seed (None = engine default).
+    # Request-intrinsic — never derived from uid/slot — so the stream is
+    # reproducible regardless of batching or admission order.
+    seed: Optional[int] = None
     # filled by the engine
     output: List[int] = field(default_factory=list)
     slot: int = -1
@@ -79,9 +83,10 @@ class Scheduler:
         self._uid = itertools.count()
 
     def submit(self, prompt: np.ndarray, max_new: int, now: float,
-               deadline_s: Optional[float] = None) -> Request:
+               deadline_s: Optional[float] = None,
+               seed: Optional[int] = None) -> Request:
         req = Request(next(self._uid), np.asarray(prompt, np.int32), max_new,
-                      deadline_s, submitted_at=now)
+                      deadline_s, submitted_at=now, seed=seed)
         too_long = (
             self.max_prompt_len is not None
             and len(prompt) > self.max_prompt_len

@@ -20,7 +20,7 @@ def test_makefile_targets_match_roadmap():
     makefile = _read("Makefile")
     for target in ("tier1", "ci", "bench", "bench-decode",
                    "smoke-int4", "smoke-prefill", "smoke-serve-cb",
-                   "smoke-prefetch", "smoke-trace"):
+                   "smoke-prefetch", "smoke-trace", "smoke-sample"):
         assert f"make {target}" in roadmap or f"`{target}`" in roadmap, (
             f"ROADMAP no longer documents the `{target}` make target"
         )
@@ -35,7 +35,8 @@ def test_makefile_targets_match_roadmap():
     # ci = dev-deps + tier1 + both smokes, as ROADMAP claims
     ci_line = re.search(r"^ci:\s*(.+?)(?:\s*##|$)", makefile, re.M).group(1)
     for dep in ("dev-deps", "tier1", "smoke-int4", "smoke-prefill",
-                "smoke-serve-cb", "smoke-prefetch", "smoke-trace"):
+                "smoke-serve-cb", "smoke-prefetch", "smoke-trace",
+                "smoke-sample"):
         assert dep in ci_line, (dep, ci_line)
     # bench-decode rows ROADMAP/benchmarks README describe are actually passed
     assert "--spec-k" in makefile and "--quantization" in makefile
@@ -57,7 +58,11 @@ def test_architecture_doc_exists_and_is_linked():
                    # span->machine mapping, and the auditor invariant list
                    "Tracer", "Perfetto", "auditor", "prefetch_ship",
                    "kv_use", "MetricsRegistry", "Prometheus",
-                   "one launch", "trace-out"):
+                   "one launch", "trace-out",
+                   # sampled speculative serving: PRNG protocol, the accept
+                   # rule, and the distributional-exactness story
+                   "stochastic_accept", "fold_in", "warp_probs",
+                   "chi-squared", "min(1, q(t)/p(t))", "smoke-sample"):
         assert needle.lower() in arch.lower(), needle
 
 
@@ -71,7 +76,9 @@ def test_benchmarks_readme_documents_the_json():
                    "prefetch_wasted_bytes", "1.5x",
                    # tracing/metrics flags + the tracing-overhead row
                    "--trace-out", "--metrics-port", "trace_overhead_ratio",
-                   "repro.obs", "3%"):
+                   "repro.obs", "3%",
+                   # the sampled *_t row family and its gate
+                   "spec4_rotary_hi_t", "accept_rate", "1.4x"):
         assert needle.lower() in readme.lower(), needle
 
 
@@ -108,7 +115,8 @@ def test_serve_cli_flags_exist():
     for flag in ("--prefill-chunk", "--spec-k", "--spec-cap",
                  "--quantization", "--quant-group",
                  "--arrival-rate", "--kv-pages", "--kv-page-size",
-                 "--prefetch", "--trace-out", "--metrics-port"):
+                 "--prefetch", "--trace-out", "--metrics-port",
+                 "--temperature", "--top-k", "--top-p", "--sample-seed"):
         assert flag in serve_src, flag
     makefile = _read("Makefile")
     assert "--prefill-chunk" in makefile          # smoke-prefill really uses it
@@ -119,3 +127,6 @@ def test_serve_cli_flags_exist():
     assert "--metrics-port" in makefile           # smoke-trace scrapes it
     assert "repro.obs" in makefile                # the auditor runs on the artifact
     assert "trace_view.py" in makefile            # the top-N span table prints
+    assert "--temperature 0.8" in makefile        # smoke-sample really samples
+    assert "--sample-seed" in makefile            # ... with a pinned seed
+    assert "accept_rate" in makefile              # ... and asserts telemetry

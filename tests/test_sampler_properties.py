@@ -1,0 +1,136 @@
+"""Hypothesis properties for temperature > 0 decode: host/device warp parity
+over drawn (temperature, top_k, top_p) grids, top-k tie discipline, and the
+distributional exactness of ``stochastic_accept`` (output ~ q, acceptance rate
+= sum(min(p, q)), leftover-only resampling) for arbitrary draft/verify
+divergences. ``tests/test_stochastic_decode.py`` anchors the same claims at
+fixed seeds in tier-1; this module fuzzes them."""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # dev-only dep (requirements-dev.txt)
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.models import sampling
+from repro.serving.sampler import Sampler, SamplerConfig, stochastic_accept
+
+settings.register_profile("ci", max_examples=40, deadline=None)
+settings.load_profile("ci")
+
+# logits quantized to a coarse grid: warp parity is bitwise-on-support, and a
+# f32(device)-vs-f64(host) comparison must not flake on near-ties at the
+# top-k/top-p boundary that the two precisions order differently
+_logit = st.integers(-8, 8).map(lambda i: i * 0.5)
+
+
+@given(
+    logits=st.lists(_logit, min_size=4, max_size=16),
+    temperature=st.floats(0.2, 2.0),
+    top_k=st.integers(0, 16),
+    top_p=st.floats(0.3, 1.0),
+)
+def test_warp_parity_host_vs_device(logits, temperature, top_k, top_p):
+    """The on-device warp (``sampling.warp_probs`` — what decode_window
+    drafts from) matches the host ``Sampler`` reference: identical kept set,
+    renormalized probabilities equal within f32 tolerance."""
+    x = np.asarray(logits, np.float64)[None, :]
+    host = Sampler(SamplerConfig(
+        temperature=temperature, top_k=top_k, top_p=top_p
+    )).warp(x)[0]
+    sp = sampling.SampleParams(
+        temperature=float(temperature), top_k=int(top_k), top_p=float(top_p)
+    )
+    dev = np.asarray(sampling.warp_probs(jnp.asarray(x, jnp.float32), sp))[0]
+    np.testing.assert_array_equal(dev > 0, host > 0)
+    np.testing.assert_allclose(dev, host, atol=2e-5)
+
+
+@given(
+    v=st.integers(4, 24),
+    k=st.integers(1, 24),
+    tie_value=_logit,
+    n_tied=st.integers(2, 8),
+)
+def test_topk_keeps_exactly_k_under_ties(v, k, tie_value, n_tied):
+    """However many logits tie at the threshold, the kept set has exactly
+    min(k, v) members and ties break toward the lower index."""
+    k = min(k, v)
+    n_tied = min(n_tied, v)
+    logits = np.linspace(-4, -2, v)
+    logits[:n_tied] = tie_value                  # a tie block at the top/front
+    host = Sampler(SamplerConfig(temperature=1.0, top_k=k)).warp(
+        logits[None, :]
+    )[0]
+    assert (host > 0).sum() == k
+    sp = sampling.SampleParams(temperature=1.0, top_k=int(k))
+    dev = np.asarray(
+        sampling.warp_probs(jnp.asarray(logits[None, :], jnp.float32), sp)
+    )[0]
+    np.testing.assert_array_equal(dev > 0, host > 0)
+
+
+@st.composite
+def _dist_pair(draw):
+    v = draw(st.integers(3, 12))
+    raw_p = draw(st.lists(st.integers(1, 50), min_size=v, max_size=v))
+    raw_q = draw(st.lists(st.integers(0, 50), min_size=v, max_size=v))
+    p = np.asarray(raw_p, np.float64)
+    q = np.asarray(raw_q, np.float64)
+    if q.sum() == 0:
+        q[draw(st.integers(0, v - 1))] = 1.0
+    return p / p.sum(), q / q.sum()
+
+
+@given(pq=_dist_pair(), seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_stochastic_accept_output_is_target_distributed(pq, seed):
+    """Accept-or-resample emits exactly q for ANY (p, q): chi-squared on the
+    emitted tokens plus the analytic acceptance-rate identity."""
+    p, q = pq
+    v = len(p)
+    r = np.random.default_rng(seed)
+    n = 15_000
+    draft = r.choice(v, size=(1, n), p=p).astype(np.int32)
+    acc, res = stochastic_accept(
+        draft, np.broadcast_to(p, (1, n, v)), np.broadcast_to(q, (1, n, v)), r
+    )
+    emitted = np.where(acc == 1, draft[0], res)
+    counts = np.bincount(emitted, minlength=v)
+    exp = n * q
+    keep = exp > 0
+    stat = ((counts[keep] - exp[keep]) ** 2 / exp[keep]).sum()
+    df = int(keep.sum()) - 1
+    crit = df * (1 - 2 / (9 * df) + 3.1 * np.sqrt(2 / (9 * df))) ** 3
+    assert stat < crit, (stat, crit)
+    assert counts[~keep].sum() == 0              # never emits outside q
+    analytic = np.minimum(p, q).sum()
+    tol = 5 * np.sqrt(max(analytic * (1 - analytic), 1e-4) / n)
+    assert abs(acc.mean() - analytic) < tol
+    rejected = res[acc == 0]
+    if rejected.size:
+        support = np.flatnonzero(np.maximum(q - p, 0) > 0)
+        if support.size:                          # p == q -> fallback to q
+            assert np.isin(rejected, support).all()
+
+
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    temperature=st.floats(0.3, 1.5),
+    top_k=st.integers(0, 10),
+    top_p=st.floats(0.5, 1.0),
+)
+@settings(max_examples=15, deadline=None)
+def test_host_draw_matches_warp_distribution(seed, temperature, top_k, top_p):
+    """The vectorized inverse-CDF draw honors the warped distribution: every
+    drawn token is on-support, and single-outcome supports draw surely."""
+    v = 10
+    logits = np.random.default_rng(seed).normal(size=v)
+    s = Sampler(SamplerConfig(
+        temperature=temperature, top_k=top_k, top_p=top_p, seed=seed
+    ))
+    target = s.warp(logits[None, :])[0]
+    toks = s(np.broadcast_to(logits, (256, v)))
+    assert np.isin(toks, np.flatnonzero(target > 0)).all()
+    if (target > 0).sum() == 1:
+        assert (toks == int(np.argmax(target))).all()

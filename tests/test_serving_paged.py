@@ -161,12 +161,14 @@ def test_kv_pool_ensure_past_reservation_raises():
 # continuous batching exactness (the PR contract)
 # ===========================================================================
 def _serve(cfg, params, prompts, *, num_slots, max_new=5, cache_len=32,
-           rescfg=None, spec_cap=4, **kw):
+           rescfg=None, spec_cap=4, seeds=None, **kw):
     eng = ServingEngine(
         cfg, params, rt=Runtime(cache_len=cache_len), num_slots=num_slots,
         residency=rescfg, spec_cap=spec_cap, **kw,
     )
-    reqs = [eng.submit(p, max_new=max_new) for p in prompts]
+    seeds = seeds or [None] * len(prompts)
+    reqs = [eng.submit(p, max_new=max_new, seed=s)
+            for p, s in zip(prompts, seeds)]
     eng.run()
     return eng, [r.output for r in reqs]
 
@@ -195,6 +197,57 @@ def test_cb_concurrent_matches_isolated(rng, regime):
     for i, p in enumerate(prompts):
         _, ref = _serve(cfg, params, [p], num_slots=1, rescfg=mk_res())
         assert outs[i] == ref[0], (regime, i)
+
+
+@pytest.mark.parametrize("regime", ["full", "rotary_hi"])
+def test_cb_sampled_matches_isolated(rng, regime):
+    """Temperature > 0 serving: each request's PRNG stream is keyed on its
+    OWN seed and position (never batch composition), so a sampled request
+    under continuous batching emits the same tokens as running alone —
+    including through speculative windows whose rejected drafts re-draw the
+    same positions with the same fold_in keys. Scoped to the f32 miss-free
+    regimes: int4 dequant differs sub-ULP across row-bucket batch shapes,
+    which greedy argmax absorbs but a categorical draw can flip."""
+    from repro.serving.sampler import SamplerConfig
+
+    cfg, params = params_for("qwen2-moe-a2.7b")
+    e = cfg.moe.num_experts
+    mk_res = lambda: (None if regime == "full" else
+                      ResidencyConfig(mode="rotary", num_slots=e))
+    smp = lambda: SamplerConfig(temperature=0.8, top_k=20, top_p=0.95, seed=3)
+    prompts = [rng.integers(0, cfg.vocab_size, int(n)).astype(np.int32)
+               for n in (5, 8, 11)]
+    seeds = [11, 22, 33]
+    eng, outs = _serve(cfg, params, prompts, num_slots=3, rescfg=mk_res(),
+                       sampler=smp(), seeds=seeds)
+    assert eng.stats.spec_windows > 0          # sampled serving still drafts
+    for i, p in enumerate(prompts):
+        _, ref = _serve(cfg, params, [p], num_slots=1, rescfg=mk_res(),
+                        sampler=smp(), seeds=[seeds[i]])
+        assert outs[i] == ref[0], (regime, i)
+    # the stream is the seed's, not the slot's: re-serving concurrently with
+    # the same seeds reproduces the outputs bitwise
+    _, outs2 = _serve(cfg, params, prompts, num_slots=3, rescfg=mk_res(),
+                      sampler=smp(), seeds=seeds)
+    assert outs == outs2
+
+
+def test_cb_sampled_slot_starved_single_request_exact(rng):
+    """Sampled decode under a slot-starved rotary residency: a single request
+    through the paged CB engine matches batch-1 bitwise even when stochastic
+    rejection composes with residency-miss truncation on the same windows."""
+    from repro.serving.sampler import SamplerConfig
+
+    cfg, params = params_for("qwen2-moe-a2.7b")
+    prompt = rng.integers(0, cfg.vocab_size, 7).astype(np.int32)
+    res = lambda: ResidencyConfig(mode="rotary", num_slots=5)
+    smp = lambda: SamplerConfig(temperature=0.9, seed=5)
+    eng_cb, out_cb = _serve(cfg, params, [prompt], num_slots=4, rescfg=res(),
+                            max_new=6, sampler=smp(), seeds=[17])
+    _, out_iso = _serve(cfg, params, [prompt], num_slots=1, rescfg=res(),
+                        max_new=6, sampler=smp(), seeds=[17])
+    assert out_cb[0] == out_iso[0]
+    assert eng_cb.stats.windows > 0
 
 
 def test_cb_slot_starved_single_request_exact(rng):

@@ -157,9 +157,13 @@ def test_greedy_accept_rule():
     # position 0 disagreement rejects the whole window for that row
     verify0 = verify.copy(); verify0[0, 0] = 99
     np.testing.assert_array_equal(greedy_accept(draft, verify0), [0, 1])
-    with pytest.raises(NotImplementedError):
-        stochastic_accept(draft, np.ones((3, 2)), np.ones((3, 2, 8)),
-                          np.random.default_rng(0))
+    # the stochastic counterpart degenerates to accept-all when draft and
+    # verify distributions coincide (ratio 1.0, u < 1 always); the full
+    # distributional contract lives in tests/test_stochastic_decode.py
+    probs = np.full((3, 2, 8), 1 / 8)
+    acc, res = stochastic_accept(draft, probs, probs, np.random.default_rng(0))
+    np.testing.assert_array_equal(acc, [3, 3])
+    np.testing.assert_array_equal(res, [-1, -1])
 
 
 def test_spec_k_validation():
@@ -172,16 +176,19 @@ def test_spec_k_validation():
         _engine(cfg, params, "full", 0, spec_k=65)        # > cache capacity
 
 
-def test_spec_falls_back_for_sampled_decode(rng):
-    """Non-greedy decode has no accept rule yet (stochastic hook only):
-    a spec engine silently falls back to exact single-token fused steps."""
+def test_spec_speculates_for_sampled_decode(rng):
+    """Non-greedy decode runs through the SAME fused speculative windows as
+    greedy: the stochastic accept rule keeps the output stream exactly the
+    seeded target distribution's draw, so spec_windows > 0 and the tokens
+    bitwise-match a single-token sampled engine (the deep stream-equivalence
+    matrix lives in tests/test_stochastic_decode.py)."""
     cfg, params = _f32_setup()
     prompt = rng.integers(0, 200, (2, 8)).astype(np.int32)
     eng = _engine(cfg, params, "full", 0, spec_k=4)
     logits = eng.prefill(prompt)
     out = eng.decode(logits, 4, greedy=False, seed=3)
     assert out.shape == (2, 4)
-    assert eng.stats.spec_windows == 0
+    assert eng.stats.spec_windows > 0
     ref = _engine(cfg, params, "full", 0)
     logits = ref.prefill(prompt)
     np.testing.assert_array_equal(out, ref.decode(logits, 4, greedy=False, seed=3))

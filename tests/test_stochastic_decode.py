@@ -1,0 +1,328 @@
+"""Temperature > 0 speculative decode: the stochastic accept rule and the
+shared PRNG protocol, verified DISTRIBUTIONALLY (tier-1, fixed seeds).
+
+Three proofs of exactness, per the PR contract:
+
+* seeded-stream equivalence — spec-K sampled decode emits the bit-identical
+  token stream as single-token sampled decode (same position-keyed draws)
+  across full / rotary_hi / slot-starved / int4 / prefetch regimes;
+* chi-squared goodness of fit — tokens emitted through accept-or-resample
+  match the TARGET distribution q for adversarial draft/verify divergences
+  (the property that makes speculative sampling "exact" in distribution);
+* rejection-path properties — the first-rejection resample draws only from
+  ``support(max(q - p, 0))``, the acceptance rate matches the analytic
+  ``sum(min(p, q))``, and residency-miss truncation composes with stochastic
+  rejection by per-row min.
+
+``tests/test_sampler_properties.py`` mirrors the distributional checks as
+hypothesis properties over drawn grids; this module is the always-run anchor.
+"""
+import numpy as np
+import pytest
+
+from conftest import params_for
+from repro.config import ResidencyConfig
+from repro.core import RotaryEngine
+from repro.models import sampling
+from repro.models.transformer import Runtime
+from repro.serving.sampler import (
+    Sampler,
+    SamplerConfig,
+    greedy_accept,
+    stochastic_accept,
+)
+
+
+def chi2_crit(df: int, z: float = 2.33) -> float:
+    """~99th-percentile chi-squared critical value (Wilson–Hilferty cube
+    approximation — no scipy in the base environment)."""
+    return df * (1.0 - 2.0 / (9.0 * df) + z * np.sqrt(2.0 / (9.0 * df))) ** 3
+
+
+def chi2_stat(counts: np.ndarray, probs: np.ndarray) -> float:
+    n = counts.sum()
+    exp = n * probs
+    keep = exp > 0
+    return float(((counts[keep] - exp[keep]) ** 2 / exp[keep]).sum())
+
+
+def _dists(v=8, seed=0):
+    """An adversarial (p, q) pair: q concentrates mass where p is thin, so
+    both the accept and the leftover-resample paths carry real traffic."""
+    r = np.random.default_rng(seed)
+    p = r.dirichlet(np.full(v, 0.4))
+    q = np.roll(p, 3) * 0.7 + r.dirichlet(np.full(v, 0.4)) * 0.3
+    return p, q / q.sum()
+
+
+# ===========================================================================
+# stochastic_accept: the rule itself
+# ===========================================================================
+def test_stochastic_accept_identical_dists_accept_all():
+    """Self-drafting degeneracy: p == q means every ratio is exactly 1 and
+    u < 1 always accepts — the in-engine invariant that makes stochastic
+    rejection structurally unreachable (rejection comes only from misses)."""
+    r = np.random.default_rng(0)
+    k, b, v = 4, 3, 16
+    probs = r.dirichlet(np.full(v, 0.5), size=(k, b))
+    draft = np.stack(
+        [[r.choice(v, p=probs[j, i]) for i in range(b)] for j in range(k)]
+    ).astype(np.int32)
+    for _ in range(50):
+        acc, res = stochastic_accept(draft, probs, probs, r)
+        assert (acc == k).all()
+        assert (res == -1).all()
+
+
+def test_greedy_accept_rule():
+    draft = np.array([[3, 3], [5, 1], [2, 2]], np.int32)       # [K=3, B=2]
+    verify = np.array([[3, 3], [5, 9], [7, 2]], np.int32)
+    np.testing.assert_array_equal(greedy_accept(draft, verify), [2, 1])
+
+
+def test_stochastic_accept_rate_matches_analytic():
+    """E[1{accept}] per position = sum_t p(t) * min(1, q(t)/p(t))
+    = sum_t min(p(t), q(t))."""
+    p, q = _dists()
+    analytic = np.minimum(p, q).sum()
+    r = np.random.default_rng(1)
+    n = 20_000
+    draft = r.choice(len(p), size=(1, n), p=p).astype(np.int32)
+    acc, _ = stochastic_accept(
+        draft,
+        np.broadcast_to(p, (1, n, len(p))),
+        np.broadcast_to(q, (1, n, len(q))),
+        r,
+    )
+    rate = acc.mean()
+    assert abs(rate - analytic) < 4 * np.sqrt(analytic * (1 - analytic) / n)
+
+
+def test_stochastic_resample_support_is_leftover_only():
+    """Rejected rows must resample strictly inside support(max(q - p, 0)) —
+    never from a token where the draft already over-covers the target."""
+    p, q = _dists(seed=2)
+    leftover_support = np.flatnonzero(np.maximum(q - p, 0.0) > 0)
+    r = np.random.default_rng(3)
+    n = 8_000
+    draft = r.choice(len(p), size=(1, n), p=p).astype(np.int32)
+    acc, res = stochastic_accept(
+        draft,
+        np.broadcast_to(p, (1, n, len(p))),
+        np.broadcast_to(q, (1, n, len(q))),
+        r,
+    )
+    rejected = res[acc == 0]
+    assert rejected.size > 100                      # the path actually ran
+    assert np.isin(rejected, leftover_support).all()
+
+
+def test_stochastic_accept_chi_squared_output_matches_target():
+    """THE exactness property: token-emitted-per-position (accepted draft OR
+    leftover resample) is distributed exactly q, however far p diverges."""
+    for seed in (0, 2, 7):
+        p, q = _dists(seed=seed)
+        v = len(p)
+        r = np.random.default_rng(100 + seed)
+        n = 30_000
+        draft = r.choice(v, size=(1, n), p=p).astype(np.int32)
+        acc, res = stochastic_accept(
+            draft,
+            np.broadcast_to(p, (1, n, v)),
+            np.broadcast_to(q, (1, n, v)),
+            r,
+        )
+        emitted = np.where(acc == 1, draft[0], res)
+        counts = np.bincount(emitted, minlength=v)
+        stat = chi2_stat(counts, q)
+        assert stat < chi2_crit(v - 1), (seed, stat, chi2_crit(v - 1))
+
+
+def test_stochastic_first_rejection_caps_window():
+    """Multi-position windows: ``accepted`` is the index of the FIRST
+    rejection (everything drafted after it is invalid), and a residency-miss
+    cap composes by per-row min — the exact expression the serving tick
+    uses: ``min(stoch_cap, miss_cap)``."""
+    v = 8
+    p = np.full(v, 1.0 / v)
+    q = np.zeros(v)
+    q[0] = 1.0                                   # q rejects every draft != 0
+    k, n = 4, 2_000
+    r = np.random.default_rng(5)
+    draft = r.choice(v, size=(k, n), p=p).astype(np.int32)
+    acc, res = stochastic_accept(
+        draft,
+        np.broadcast_to(p, (k, n, v)),
+        np.broadcast_to(q, (k, n, v)),
+        r,
+    )
+    # accepted == j  <=>  draft[0..j-1] == 0 (ratio v, certain accept) and
+    # draft[j] != 0 (ratio 0, certain reject)
+    expect = np.argmax(draft != 0, axis=0)
+    expect = np.where((draft != 0).any(axis=0), expect, k)
+    np.testing.assert_array_equal(acc, expect)
+    assert (res[acc < k] == 0).all()             # leftover = q itself here
+    # miss composition: a miss cap below the stochastic rejection wins, one
+    # above it leaves the stochastic cap in charge
+    stoch_cap = np.where(acc < k, acc + 1, k)
+    miss_cap = np.full(n, 2, np.int32)
+    composed = np.minimum(stoch_cap, miss_cap)
+    assert (composed <= 2).all()
+    assert (composed[stoch_cap < 2] == stoch_cap[stoch_cap < 2]).all()
+
+
+# ===========================================================================
+# host Sampler: top-k tie regression + vectorized draw
+# ===========================================================================
+def test_sampler_topk_tie_break_by_index():
+    """Regression: ties at the k-th threshold must NOT widen the kept set.
+    The old ``x < kth`` mask kept every tied candidate; the fix breaks ties
+    toward the lower index, matching ``lax.top_k``."""
+    s = Sampler(SamplerConfig(temperature=1.0, top_k=2, seed=0))
+    logits = np.asarray([[1.0, 5.0, 5.0, 5.0, 0.0]] * 512)
+    p = s.warp(logits)
+    assert ((p > 0).sum(axis=-1) == 2).all()          # exactly k survivors
+    # lowest-index ties win: tokens 1 and 2, never 3
+    assert (p[:, [1, 2]] > 0).all() and (p[:, 3] == 0).all()
+    toks = s(logits)
+    assert set(np.unique(toks)) <= {1, 2}
+
+
+def test_sampler_draw_matches_warp_distribution():
+    """The batched inverse-CDF draw samples the warped distribution (chi²)."""
+    s = Sampler(SamplerConfig(temperature=0.7, top_k=6, top_p=0.9, seed=0))
+    v = 12
+    logits = np.random.default_rng(4).normal(size=v)[None, :]
+    target = s.warp(logits)[0]
+    n = 30_000
+    toks = s(np.broadcast_to(logits[0], (n, v)))
+    counts = np.bincount(toks, minlength=v)
+    df = int((target > 0).sum()) - 1
+    assert chi2_stat(counts, target) < chi2_crit(df)
+
+
+# ===========================================================================
+# on-device draws: warp parity + chi-squared against the host target
+# ===========================================================================
+def test_device_draws_chi_squared_vs_host_target():
+    """``sampling.sample_step`` draws (the in-window drafting path) are
+    distributed per the host ``Sampler.warp`` target — device warp and
+    device categorical together match the reference distribution."""
+    import jax.numpy as jnp
+
+    v = 12
+    logits = np.random.default_rng(6).normal(size=v).astype(np.float32)
+    sp = sampling.SampleParams(temperature=0.8, top_k=8, top_p=0.9)
+    host = Sampler(SamplerConfig(temperature=0.8, top_k=8, top_p=0.9))
+    target = host.warp(logits[None, :].astype(np.float64))[0]
+    n = 20_000
+    keys = sampling.row_keys(0, n)                 # n independent streams
+    toks, probs, _ = sampling.sample_step(
+        jnp.broadcast_to(jnp.asarray(logits), (n, v)), keys,
+        jnp.int32(17), sp,
+    )
+    # warp parity: same kept set, same renormalized probs (f32 tolerance)
+    probs0 = np.asarray(probs)[0]
+    np.testing.assert_array_equal(probs0 > 0, target > 0)
+    np.testing.assert_allclose(probs0, target, atol=1e-6)
+    counts = np.bincount(np.asarray(toks), minlength=v)
+    df = int((target > 0).sum()) - 1
+    assert chi2_stat(counts, target) < chi2_crit(df)
+
+
+# ===========================================================================
+# seeded-stream equivalence: spec-K sampled == single-token sampled
+# ===========================================================================
+def _f32_setup():
+    cfg, params = params_for("qwen2-moe-a2.7b")
+    return cfg, params
+
+
+_REGIMES = {
+    "full": lambda e: dict(rescfg=ResidencyConfig(mode="full")),
+    "rotary_hi": lambda e: dict(
+        rescfg=ResidencyConfig(mode="rotary", num_slots=e)
+    ),
+    "slot_starved": lambda e: dict(
+        rescfg=ResidencyConfig(mode="rotary", num_slots=5)
+    ),
+    "int4": lambda e: dict(
+        rescfg=ResidencyConfig(mode="rotary", num_slots=e, quantization="int4")
+    ),
+    "prefetch": lambda e: dict(
+        rescfg=ResidencyConfig(mode="rotary", num_slots=6, prefetch_margin=2),
+        prefetch=True,
+    ),
+}
+
+
+@pytest.mark.parametrize("regime", list(_REGIMES))
+def test_sampled_spec_stream_equivalence(regime):
+    """Spec-K sampled decode is BIT-IDENTICAL to single-token sampled decode
+    under the stateless position-keyed PRNG protocol — across residency
+    regimes, including miss-truncated windows (slot_starved: the stochastic
+    cap composes with the miss cap and rejected positions re-draw with the
+    SAME key after replay) and prefetch window relaunches."""
+    cfg, params = _f32_setup()
+    kw = _REGIMES[regime](cfg.moe.num_experts)
+    rescfg = kw.pop("rescfg")
+    prompt = np.random.default_rng(0).integers(
+        0, cfg.vocab_size, (2, 6)
+    ).astype(np.int32)
+    sc = SamplerConfig(temperature=0.9, top_k=0, top_p=0.92, seed=13)
+
+    def run(spec_k):
+        eng = RotaryEngine(
+            cfg, params, rescfg, rt=Runtime(cache_len=64), batch=2,
+            spec_k=spec_k, **kw,
+        )
+        return eng.generate(prompt, 10, sampler=sc), eng
+
+    out1, _ = run(1)
+    out4, eng4 = run(4)
+    np.testing.assert_array_equal(out1, out4)
+    assert eng4.stats.spec_windows > 0
+    assert 0.0 <= eng4.stats.accept_rate <= 1.0
+    if regime in ("full", "rotary_hi", "int4"):
+        # miss-free regimes: self-drafting accepts every position
+        assert eng4.stats.accept_rate == 1.0
+
+
+def test_sampled_spec_respects_sampler_seed():
+    """Different sampler seeds give different streams; the same seed twice is
+    reproducible (the stream is a pure function of (seed, positions))."""
+    cfg, params = _f32_setup()
+    prompt = np.random.default_rng(1).integers(
+        0, cfg.vocab_size, (2, 5)
+    ).astype(np.int32)
+
+    def run(seed):
+        eng = RotaryEngine(
+            cfg, params, ResidencyConfig(mode="full"),
+            rt=Runtime(cache_len=64), batch=2, spec_k=4,
+        )
+        return eng.generate(
+            prompt, 8, sampler=SamplerConfig(temperature=1.0, seed=seed)
+        )
+
+    a, b, c = run(3), run(3), run(4)
+    np.testing.assert_array_equal(a, b)
+    assert not np.array_equal(a, c)
+
+
+def test_sampled_greedy_false_kwarg_speculates():
+    """The legacy ``greedy=False`` spelling now rides the fused window path
+    (temperature-1.0 sampling) instead of falling back to host-softmax
+    single-token decode."""
+    cfg, params = _f32_setup()
+    prompt = np.random.default_rng(2).integers(
+        0, cfg.vocab_size, (2, 5)
+    ).astype(np.int32)
+    eng = RotaryEngine(
+        cfg, params, ResidencyConfig(mode="full"),
+        rt=Runtime(cache_len=64), batch=2, spec_k=4,
+    )
+    logits = eng.prefill(prompt)
+    out = eng.decode(logits, 8, greedy=False, seed=5)
+    assert out.shape == (2, 8)
+    assert eng.stats.spec_windows > 0
